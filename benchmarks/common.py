@@ -1,0 +1,85 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import compile_snn, from_quantized, run_mapped, CycleModel
+from repro.snn import QuantConfig, SNNConfig, init_params, quantize
+from repro.snn.models import forward
+from repro.snn.train import train
+from repro.data import mnist_batches, synthetic_mnist, synthetic_shd, shd_batches
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+def trained_mnist_snn(steps: int = 60, seed: int = 0):
+    """Short synthetic-MNIST training run for the hardware benchmarks."""
+    from repro.snn import MNIST_CONFIG
+    xtr, ytr, xte, yte = synthetic_mnist(n_train=512, n_test=128, seed=seed)
+    data = mnist_batches(xtr, ytr, batch=64, seed=seed)
+    res = train(MNIST_CONFIG, data, steps=steps, lr=5e-4,
+                key=jax.random.PRNGKey(seed), encode=True)
+    return MNIST_CONFIG, res.params, (xte, yte)
+
+
+def trained_shd_snn(sparsity: float, steps: int = 60, hidden: int = 128,
+                    timesteps: int = 40, seed: int = 0):
+    """Short synthetic-SHD SRNN training run at a given sparsity."""
+    from repro.snn import LIFParams
+    cfg = SNNConfig(layer_sizes=(700, hidden, 20), recurrent=True,
+                    sparsity=sparsity, lif=LIFParams(alpha=0.03125),
+                    surrogate="sigmoid", timesteps=timesteps)
+    xtr, ytr, xte, yte = synthetic_shd(n_train=256, n_test=128,
+                                       timesteps=timesteps, seed=seed)
+    data = shd_batches(xtr, ytr, batch=32, seed=seed)
+    res = train(cfg, data, steps=steps, lr=2e-3, key=jax.random.PRNGKey(seed),
+                encode=False)
+    return cfg, res.params, (xte, yte)
+
+
+def accuracy(cfg, params, xte, yte, encode: bool, key=None):
+    import jax.numpy as jnp
+    from repro.snn.train import rate_encode
+    key = key if key is not None else jax.random.PRNGKey(1)
+    fwd = jax.jit(lambda p, s: jnp.argmax(forward(p, s, cfg)[0], -1))
+    correct = 0
+    for i in range(0, len(xte), 64):
+        x = xte[i:i + 64]
+        if encode:
+            s = rate_encode(jnp.asarray(x), cfg.timesteps,
+                            jax.random.fold_in(key, i))
+        else:
+            s = jnp.asarray(x.transpose(1, 0, 2).astype(np.float32))
+        correct += int((np.asarray(fwd(params, s)) == yte[i:i + 64]).sum())
+    return correct / len(xte)
+
+
+def simulate_inference(cfg, params, hw, qc: QuantConfig, sample,
+                       encode: bool, key=None, method="framework",
+                       max_iters: int = 40000):
+    """quantize -> map -> schedule -> mapped execution -> cycle model."""
+    import jax.numpy as jnp
+    from repro.snn.train import rate_encode
+    q = quantize(params, cfg, qc)
+    g = from_quantized(q)
+    tables, report, part = compile_snn(g, hw, method=method, seed=0,
+                                       max_iters=max_iters)
+    key = key if key is not None else jax.random.PRNGKey(2)
+    if encode:
+        spikes = np.asarray(rate_encode(jnp.asarray(sample[None]),
+                                        cfg.timesteps, key))[:, 0]
+    else:
+        spikes = sample.astype(np.int32)
+    s_map, v_map, stats = run_mapped(g, tables, spikes.astype(np.int32))
+    cm = CycleModel(hw)
+    rep = cm.run(stats["packet_counts"], tables.depth, q.n_total_synapses)
+    return q, g, tables, report, rep

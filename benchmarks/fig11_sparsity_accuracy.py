@@ -1,0 +1,25 @@
+"""Fig 11: SHD accuracy vs weight-sparsity level (reduced scale: synthetic
+SHD, short training; the paper's qualitative claim is that accuracy
+degrades gracefully until very high sparsity)."""
+from __future__ import annotations
+
+from benchmarks.common import accuracy, trained_shd_snn
+
+
+LEVELS_FULL = (0.0, 0.4, 0.7, 0.82, 0.9)
+LEVELS_QUICK = (0.0, 0.82)
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = []
+    for s in (LEVELS_QUICK if quick else LEVELS_FULL):
+        cfg, params, (xte, yte) = trained_shd_snn(
+            sparsity=s, steps=40 if quick else 120)
+        acc = accuracy(cfg, params, xte, yte, encode=False)
+        rows.append((f"fig11.acc@sparsity={s}", acc, "chance=0.05"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

@@ -1,0 +1,41 @@
+"""Fig 12: hardware metrics vs sparsity — OT depth & latency (b), power &
+energy (c), memory footprint & BRAM (d) all scale with the non-zero
+synapse count, while logic (a) is set by architectural parameters only."""
+from __future__ import annotations
+
+from benchmarks.common import simulate_inference, trained_shd_snn
+from repro.core.memory_model import HardwareConfig
+from repro.snn import QuantConfig
+
+
+HW = HardwareConfig(n_spus=64, unified_mem_depth=256, concentration=3,
+                    weight_bits=6, potential_bits=9, max_neurons=1020,
+                    max_post_neurons=320)
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = []
+    levels = (0.6, 0.9) if quick else (0.5, 0.7, 0.82, 0.9)
+    for s in levels:
+        cfg, params, (xte, yte) = trained_shd_snn(
+            sparsity=s, steps=20 if quick else 60,
+            timesteps=20 if quick else 40)
+        q, g, tables, report, rep = simulate_inference(
+            cfg, params, HW, QuantConfig(6, 9), xte[0], encode=False)
+        tag = f"sparsity={s}"
+        rows += [
+            (f"fig12.ot_depth[{tag}]", report.ot_depth, "grows w/ density"),
+            (f"fig12.latency_ms[{tag}]", rep.latency_us / 1e3, ""),
+            (f"fig12.energy_mj[{tag}]", rep.energy_mj, ""),
+            (f"fig12.memory_kb[{tag}]", report.resources.memory_kb, ""),
+            (f"fig12.brams[{tag}]", report.resources.brams, ""),
+            (f"fig12.logic[{tag}]",
+             report.resources.luts + report.resources.ffs,
+             "must be ~constant"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

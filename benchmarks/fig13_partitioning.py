@@ -1,0 +1,80 @@
+"""Fig 13: the probabilistic partitioner vs the three round-robin baselines
+across Unified-Memory depth constraints — minimum feasible OT depth (a)
+and total memory footprint (b).
+
+The paper's instance is SHD with 9-bit weights (33k synapses, 64 SPUs).
+We run a same-shape scaled instance (sparse 700-300-20 SRNN) so the whole
+sweep stays tractable on one CPU; the qualitative claims under test:
+
+  * framework tracks synapse-RR (the balance optimum) when memory is
+    relaxed, keeps finding feasible mappings when memory is far tighter
+    than any baseline needs;
+  * post-neuron RR is strong under tight memory but cannot exploit
+    additional memory (flat OT depth);
+  * weight-RR needs mid memory and schedules worst.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import trained_shd_snn
+from repro.core import (BASELINES, HardwareConfig, compile_snn,
+                        from_quantized, schedule)
+from repro.core.memory_model import spu_usage, total_memory_kb
+from repro.snn import QuantConfig, quantize
+
+
+def _instance(quick: bool):
+    cfg, params, _ = trained_shd_snn(sparsity=0.87, steps=5,
+                                     hidden=96 if quick else 128,
+                                     timesteps=10)
+    q = quantize(params, cfg, QuantConfig(weight_bits=9, potential_bits=18))
+    return from_quantized(q)
+
+
+def _hw(depth: int, g) -> HardwareConfig:
+    return HardwareConfig(n_spus=16, unified_mem_depth=depth,
+                          concentration=3, weight_bits=9,
+                          potential_bits=18, max_neurons=g.n_neurons,
+                          max_post_neurons=g.n_internal)
+
+
+def run(quick: bool = False) -> list[tuple]:
+    g = _instance(quick)
+    rows = [("fig13.n_synapses", g.n_synapses, "")]
+
+    # baseline requirements: minimum UM depth each baseline needs
+    base_ot, base_um = {}, {}
+    for name, fn in BASELINES.items():
+        res = fn(g, _hw(10 ** 9, g))
+        need = max(spu_usage(len(np.unique(g.weight[res.assign == i])),
+                             len(np.unique(g.post[res.assign == i])), 3)
+                   for i in range(16))
+        tables = schedule(g, res.assign, _hw(10 ** 9, g))
+        base_ot[name], base_um[name] = tables.depth, need
+        rows.append((f"fig13.{name}.min_um_depth", need, ""))
+        rows.append((f"fig13.{name}.ot_depth", tables.depth, ""))
+
+    depths = [int(base_um["post_neuron_rr"] * f)
+              for f in ((1.0, 2.5) if quick else (0.95, 1.1, 1.6, 2.5, 4.0))]
+    for d in depths:
+        hw = _hw(d, g)
+        tables, report, part = compile_snn(g, hw, seed=0, max_iters=200000)
+        rows.append((f"fig13.framework.ot_depth[um={d}]",
+                     report.ot_depth if report.feasible else -1,
+                     f"feasible={report.feasible}"))
+        rows.append((f"fig13.framework.memory_kb[um={d}]",
+                     total_memory_kb(hw, report.ot_depth), ""))
+    # headline check: with relaxed memory the framework reaches the
+    # synapse-RR optimum within a few percent (paper: 536 vs 539)
+    hw = _hw(int(base_um["synapse_rr"] * 1.2), g)
+    tables, report, part = compile_snn(g, hw, seed=0, max_iters=60000)
+    rows.append(("fig13.framework_vs_synapse_rr",
+                 report.ot_depth / base_ot["synapse_rr"],
+                 "paper ratio ~0.99"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

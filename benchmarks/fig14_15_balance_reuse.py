@@ -1,0 +1,44 @@
+"""Fig 14 (SPU balance: max/min/std synapse counts vs UM depth) and
+Fig 15 (post-neuron centralization + weight reuse vs UM depth)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.fig13_partitioning import _hw, _instance
+from repro.core import compile_snn
+
+
+def run(quick: bool = False) -> list[tuple]:
+    g = _instance(quick)
+    rows = []
+    # find a tight-but-feasible anchor from the post-RR requirement
+    from repro.core import BASELINES
+    from repro.core.memory_model import spu_usage
+    res = BASELINES["post_neuron_rr"](g, _hw(10 ** 9, g))
+    anchor = max(spu_usage(len(np.unique(g.weight[res.assign == i])),
+                           len(np.unique(g.post[res.assign == i])), 3)
+                 for i in range(16))
+    factors = (1.0, 3.0) if quick else (0.9, 1.2, 2.0, 4.0)
+    for f in factors:
+        d = int(anchor * f)
+        tables, report, part = compile_snn(g, _hw(d, g), seed=0,
+                                           max_iters=60000)
+        syn = report.spu_synapse_counts
+        tag = f"um={d}"
+        rows += [
+            (f"fig14.syn_max[{tag}]", int(syn.max()), ""),
+            (f"fig14.syn_min[{tag}]", int(syn.min()), ""),
+            (f"fig14.syn_std[{tag}]", float(syn.std()),
+             "drops as UM grows"),
+            (f"fig15.posts_per_spu[{tag}]",
+             float(report.spu_post_counts.mean()),
+             "grows as UM grows"),
+            (f"fig15.weights_per_spu[{tag}]",
+             float(report.spu_weight_counts.mean()), ""),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

@@ -1,0 +1,35 @@
+"""§Roofline aggregation: reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all``) and emits the per-cell roofline
+terms. This is a REPORT benchmark — it fails (rows=0) if the dry-run has
+not been executed."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(quick: bool = False, out_dir: str = "results/dryrun") -> list[tuple]:
+    rows = []
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    worst = (None, 1e9)
+    for f in files:
+        d = json.load(open(f))
+        if "__" in os.path.basename(f):
+            continue                        # perf-iteration variants
+        r = d["roofline"]
+        tag = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        rows.append((f"roofline.fraction[{tag}]",
+                     round(r["roofline_fraction"], 4),
+                     f"dom={r['dominant']},useful={r['useful_flop_ratio']:.2f}"))
+        if d["mesh"] == "single" and r["roofline_fraction"] < worst[1]:
+            worst = (tag, r["roofline_fraction"])
+    rows.append(("roofline.cells", len(rows), "expect 64 (32 x 2 meshes)"))
+    if worst[0]:
+        rows.append(("roofline.worst_cell", worst[1], worst[0]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

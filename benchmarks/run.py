@@ -1,0 +1,54 @@
+"""Benchmark runner: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13]
+
+Prints ``name,value,derived`` CSV rows per benchmark plus wall time.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table3_latency_energy",   # Table 3
+    "benchmarks.fig11_sparsity_accuracy", # Fig 11
+    "benchmarks.fig12_sparsity_hw",       # Fig 12
+    "benchmarks.fig13_partitioning",      # Fig 13
+    "benchmarks.fig14_15_balance_reuse",  # Fig 14 + 15
+    "benchmarks.kernel_benchmarks",       # Pallas kernel structure
+    "benchmarks.roofline_table",          # §Roofline aggregation
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.run(quick=args.quick)
+            dt = time.time() - t0
+            print(f"# {mod_name} ({dt:.1f}s)")
+            for name, value, derived in rows:
+                print(f"{name},{value},{derived}")
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED")
+            traceback.print_exc()
+        sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Table 3: MNIST latency / power / energy vs the paper's published point
+(SupraSNN column: 0.149 ms, 0.172 W, 0.02563 mJ/image, 0.27675 nJ/syn).
+
+The network is trained briefly on the synthetic MNIST (container is
+offline), so spike statistics differ slightly from the paper's run; the
+hardware point (16 SPUs, UM 128, K=3, 4-bit weights) is exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import simulate_inference, trained_mnist_snn
+from repro.configs.snn_paper import MNIST_HW
+from repro.snn import QuantConfig
+
+
+PAPER = {"latency_ms": 0.149, "power_w": 0.172, "energy_mj": 0.02563,
+         "energy_per_syn_nj": 0.27675, "ot_depth": 661}
+
+
+def _prune_to_sparsity(params, cfg, target: float):
+    """Magnitude-prune the float weights so post-quantization sparsity hits
+    the paper's deployed level (88.74%) — the paper's network reaches this
+    through converged training on real MNIST; our synthetic short run does
+    not, so the HARDWARE point is reproduced on a calibrated network."""
+    import jax.numpy as jnp
+    out = dict(params)
+    ws = [np.asarray(params[f"w{i}"]) * np.asarray(params[f"mask{i}"])
+          for i in range(cfg.n_layers)]
+    flat = np.concatenate([np.abs(w).ravel() for w in ws])
+    keep = int(round(len(flat) * (1.0 - target)))
+    thresh = np.partition(flat, -keep)[-keep]
+    for i, w in enumerate(ws):
+        out[f"mask{i}"] = jnp.asarray((np.abs(w) >= thresh)
+                                      .astype(np.float32))
+    return out
+
+
+def run(quick: bool = False) -> list[tuple]:
+    cfg, params, (xte, yte) = trained_mnist_snn(steps=20 if quick else 80)
+    rows = []
+    for tag, p in (("", params),
+                   ("@paper_sparsity",
+                    _prune_to_sparsity(params, cfg, 0.8874))):
+        samples = xte[:3 if quick else 10]
+        reports = []
+        q = g = tables = report = None
+        for s in samples:
+            q, g, tables, report, rep = simulate_inference(
+                cfg, p, MNIST_HW, QuantConfig(4, 5), s, encode=True)
+            reports.append(rep)
+        lat_ms = float(np.mean([r.latency_us for r in reports])) / 1e3
+        rows += [
+            (f"table3.latency_ms{tag}", lat_ms,
+             f"paper={PAPER['latency_ms']}"),
+            (f"table3.power_w{tag}", reports[0].power_w,
+             f"paper={PAPER['power_w']}"),
+            (f"table3.energy_mj{tag}",
+             float(np.mean([r.energy_mj for r in reports])),
+             f"paper={PAPER['energy_mj']}"),
+            (f"table3.energy_per_syn_nj{tag}",
+             float(np.mean([r.energy_per_synapse_nj for r in reports])),
+             f"paper={PAPER['energy_per_syn_nj']}"),
+            (f"table3.ot_depth{tag}", report.ot_depth,
+             f"paper={PAPER['ot_depth']}"),
+            (f"table3.sparsity_postq{tag}", q.sparsity, "paper=0.8874"),
+            (f"table3.brams{tag}", report.resources.brams, "paper=33.5"),
+            (f"table3.logic_cells{tag}",
+             report.resources.luts + report.resources.ffs, "paper=6144"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]},{r[2]}")

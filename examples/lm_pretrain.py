@@ -1,0 +1,28 @@
+"""LM pretraining through the fault-tolerant launcher — checkpointing,
+journal, straggler watchdog, resume. Defaults to a CPU-sized reduced
+config; ``--arch qwen2-1.5b`` (no --reduced on real hardware) runs the
+full assigned architecture on the production mesh.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 40
+    # kill it mid-run, then:
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 40 --resume
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_pretrain")
+    ap.add_argument("--resume", action="store_true")
+    a = ap.parse_args()
+    args = ["--arch", a.arch, "--reduced", "--steps", str(a.steps),
+            "--batch", str(a.batch), "--seq", str(a.seq),
+            "--ckpt-dir", a.ckpt_dir, "--ckpt-every", "10"]
+    if a.resume:
+        args.append("--resume")
+    train_main(args)

@@ -1,0 +1,20 @@
+"""Batched LM serving through the framework's serve path: prefill a prompt
+batch, decode with donated in-place caches (this is the program the
+``decode_32k`` / ``long_500k`` dry-run cells lower at production scale).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-3b
+    PYTHONPATH=src python examples/serve_batched.py --arch glm4-9b --gen 32
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    a = ap.parse_args()
+    serve_main(["--arch", a.arch, "--reduced", "--batch", str(a.batch),
+                "--prompt-len", str(a.prompt_len), "--gen", str(a.gen)])

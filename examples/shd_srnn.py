@@ -1,0 +1,54 @@
+"""Recurrent SNN on (synthetic) SHD — the paper's second benchmark: a
+700-300-20 SRNN at 87% sparsity mapped onto the 64-SPU XC7Z030 config.
+
+    PYTHONPATH=src python examples/shd_srnn.py [--steps 200] [--hidden 300]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.snn_paper import SHD_HW
+from repro.core import CycleModel, compile_snn, from_quantized, run_mapped
+from repro.data import shd_batches, synthetic_shd
+from repro.snn import LIFParams, QuantConfig, SNNConfig, quantize
+from repro.snn.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--hidden", type=int, default=300)
+    ap.add_argument("--timesteps", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = SNNConfig(layer_sizes=(700, args.hidden, 20), recurrent=True,
+                    sparsity=0.8704, lif=LIFParams(alpha=0.03125),
+                    surrogate="sigmoid", timesteps=args.timesteps)
+    xtr, ytr, xte, yte = synthetic_shd(n_train=512, n_test=128,
+                                       timesteps=args.timesteps)
+    print(f"== training SRNN {cfg.layer_sizes}, sparsity {cfg.sparsity} ==")
+    res = train(cfg, shd_batches(xtr, ytr, 32), args.steps, lr=1e-3,
+                key=jax.random.PRNGKey(0), encode=False, verbose=True,
+                log_every=50)
+
+    print("== quantize (7-bit weights / 12-bit potential, Table 2) ==")
+    q = quantize(res.params, cfg, QuantConfig(7, 12))
+    g = from_quantized(q)
+    print(f"nonzero synapses: {g.n_synapses}")
+
+    print("== map onto the 64-SPU XC7Z030 config ==")
+    tables, report, part = compile_snn(g, SHD_HW, max_iters=60000)
+    print(f"feasible={report.feasible} OT depth={report.ot_depth} "
+          f"(paper: 742)")
+
+    print("== mapped inference on one sample ==")
+    s_map, _, stats = run_mapped(g, tables, xte[0].astype(np.int32))
+    rep = CycleModel(SHD_HW).run(stats["packet_counts"], tables.depth,
+                                 q.n_total_synapses)
+    print(f"latency {rep.latency_us / 1e3:.3f} ms/sample (paper: 1.41 ms), "
+          f"energy {rep.energy_mj:.3f} mJ (paper: 0.77)")
+
+
+if __name__ == "__main__":
+    main()

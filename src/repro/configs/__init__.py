@@ -1,0 +1,51 @@
+"""Config registry: ``get_config(name)`` / ``get_reduced(name)`` for every
+assigned architecture (plus the paper's own SNN hardware configs)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, smoke_shape
+
+_MODULES = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).reduced()
+
+
+def all_cells():
+    """All applicable (arch, shape) pairs — the dry-run grid (40 cells)."""
+    cells = []
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES:
+            if applicable(cfg, s):
+                cells.append((a, s))
+    return cells
+
+
+__all__ = ["ArchConfig", "MLAConfig", "MoEConfig", "SSMConfig", "SHAPES",
+           "ShapeSpec", "applicable", "smoke_shape", "ARCH_NAMES",
+           "get_config", "get_reduced", "all_cells"]

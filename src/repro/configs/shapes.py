@@ -1,0 +1,42 @@
+"""Assigned input shapes (one set, shared by all 10 LM archs).
+
+`train_4k` / `prefill_32k` lower train_step / prefill_step; `decode_32k` /
+`long_500k` lower serve_step (single new token against a cache of seq_len).
+`long_500k` requires sub-quadratic attention: run only for archs with
+``sub_quadratic=True`` (rwkv6-3b, zamba2-7b), skip the rest (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(arch_cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return bool(arch_cfg.sub_quadratic)
+    return True
+
+
+def smoke_shape(kind: str = "train") -> ShapeSpec:
+    """Tiny variant for CPU smoke tests."""
+    if kind == "train":
+        return ShapeSpec("smoke_train", 32, 2, "train")
+    if kind == "prefill":
+        return ShapeSpec("smoke_prefill", 32, 2, "prefill")
+    return ShapeSpec("smoke_decode", 64, 2, "decode")

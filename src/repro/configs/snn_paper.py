@@ -1,0 +1,13 @@
+"""SupraSNN's own two networks (paper Table 2) as selectable configs."""
+from repro.core.memory_model import HardwareConfig
+from repro.snn.models import MNIST_CONFIG, SHD_CONFIG  # noqa: F401
+
+MNIST_HW = HardwareConfig(
+    n_spus=16, unified_mem_depth=128, concentration=3, weight_bits=4,
+    potential_bits=5, max_neurons=910, max_post_neurons=126,
+    clock_mhz=100.0)
+
+SHD_HW = HardwareConfig(
+    n_spus=64, unified_mem_depth=256, concentration=3, weight_bits=7,
+    potential_bits=12, max_neurons=1020, max_post_neurons=320,
+    clock_mhz=100.0)

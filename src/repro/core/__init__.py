@@ -1,0 +1,35 @@
+# SupraSNN core: the paper's primary contribution.
+#   graph         SNN-as-graph (Eq. 6)
+#   memory_model  Eqs. (9)-(11)
+#   partition     probabilistic partitioning (§6.2)
+#   baselines     round-robin baselines (§7.4.1)
+#   schedule      heuristic scheduling (§6.3)
+#   engine        functional executor + cycle/energy model (§4, §7)
+#   cost          FPGA resource model (Table 2 fit)
+#   compiler      end-to-end mapping pipeline (Fig. 8)
+from repro.core.graph import SNNGraph, from_quantized, random_graph
+from repro.core.memory_model import (HardwareConfig, spu_score, spu_usage,
+                                     scores_from_assignment,
+                                     total_memory_bits, total_memory_kb,
+                                     bram_count)
+from repro.core.partition import PartitionResult, partition
+from repro.core.baselines import (BASELINES, post_neuron_round_robin,
+                                  synapse_round_robin, weight_round_robin)
+from repro.core.schedule import NOP, OpTables, schedule, validate_schedule
+from repro.core.engine import (CycleModel, CycleReport, PowerModel,
+                               MergeAlignmentError, run_mapped, run_oracle)
+from repro.core.cost import ResourceModel, ResourceReport, resources
+from repro.core.compiler import (CompileReport, compile_snn,
+                                 compile_quantized, initialization_packets)
+
+__all__ = [
+    "SNNGraph", "from_quantized", "random_graph", "HardwareConfig",
+    "spu_score", "spu_usage", "scores_from_assignment", "total_memory_bits",
+    "total_memory_kb", "bram_count", "PartitionResult", "partition",
+    "BASELINES", "post_neuron_round_robin", "synapse_round_robin",
+    "weight_round_robin", "NOP", "OpTables", "schedule", "validate_schedule",
+    "CycleModel", "CycleReport", "PowerModel", "MergeAlignmentError",
+    "run_mapped", "run_oracle", "ResourceModel", "ResourceReport",
+    "resources", "CompileReport", "compile_snn", "compile_quantized",
+    "initialization_packets",
+]

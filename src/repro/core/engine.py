@@ -1,0 +1,212 @@
+"""SupraSNN execution engine.
+
+Two layers:
+
+1. ``run_mapped`` — a *functional* executor of the mapped program
+   (OpTables): simulates Spike Memory set/clear, per-SPU partial-current
+   accumulation, ME-tree merging with slot-alignment assertions, and the
+   centralized Neuron Unit's integer LIF update. Its outputs must match
+   ``run_oracle`` BIT-EXACTLY — the paper's deterministic-commit property.
+
+2. ``CycleModel`` — cycle-accurate timing of the same execution (MC-tree
+   distribution phase + 2-cycles/op synaptic phase + ME/NU pipeline drain),
+   used for the latency/energy numbers of Tables 2/3 and Figs. 12/13.
+
+Hardware semantics (paper §4.2): spikes generated in timestep t-1 are
+distributed at the start of timestep t; external input spikes for timestep
+t arrive through the Spike Handler in the same window.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import SNNGraph
+from repro.core.memory_model import HardwareConfig
+from repro.core.schedule import NOP, OpTables
+from repro.snn.lif import lif_step_int
+
+
+# ---------------------------------------------------------------------------
+# Oracle: dense integer LIF with hardware (delayed) semantics.
+# ---------------------------------------------------------------------------
+
+def run_oracle(g: SNNGraph, ext_spikes: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Dense reference simulation.
+
+    ext_spikes: [T, n_inputs] binary.
+    Returns (spikes [T, n_internal], v_final [n_internal]) int32.
+    """
+    t_steps = ext_spikes.shape[0]
+    n_int = g.n_internal
+    # dense weight matrix [n_neurons, n_internal]
+    w = np.zeros((g.n_neurons, n_int), np.int64)
+    w[g.pre, g.local(g.post)] = g.weight
+
+    v = np.zeros(n_int, np.int32)
+    s_prev = np.zeros(n_int, np.int32)          # internal spikes at t-1
+    out = np.zeros((t_steps, n_int), np.int32)
+    for t in range(t_steps):
+        s_all = np.concatenate([ext_spikes[t].astype(np.int64),
+                                s_prev.astype(np.int64)])
+        current = (s_all @ w).astype(np.int32)
+        v, s = lif_step_int(v, current, g.lif)
+        out[t] = s
+        s_prev = s
+    return out, v
+
+
+# ---------------------------------------------------------------------------
+# Functional executor of the mapped program.
+# ---------------------------------------------------------------------------
+
+class MergeAlignmentError(AssertionError):
+    pass
+
+
+def run_mapped(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
+               check_alignment: bool = True
+               ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Execute the scheduled program. Returns (spikes, v_final, stats).
+
+    stats carries per-timestep packet counts for the cycle model.
+    """
+    m, depth = tables.pre.shape
+    t_steps = ext_spikes.shape[0]
+    n_int = g.n_internal
+
+    # routing bitstrings: bit[i] of neuron q == SPU i holds a synapse from q
+    routing = np.zeros((g.n_neurons, m), bool)
+    routing[g.pre, tables.assign] = True
+
+    spike_mem = np.zeros((m, g.n_neurons), bool)   # per-SPU bitmap SRAM
+    partial = np.zeros((m, n_int), np.int64)       # per-SPU partial currents
+    v = np.zeros(n_int, np.int32)
+    s_prev = np.zeros(n_int, np.int32)
+    out = np.zeros((t_steps, n_int), np.int32)
+    pkt_counts = np.zeros(t_steps, np.int64)
+
+    pre_l = tables.pre            # [M, depth]
+    post_l = tables.post
+    w_l = tables.weight
+    pe_l = tables.pre_end
+    poe_l = tables.post_end
+
+    for t in range(t_steps):
+        # ---- distribution phase: MC packets into Spike Memory ----
+        fired = np.flatnonzero(np.concatenate(
+            [ext_spikes[t].astype(bool),
+             s_prev.astype(bool)]))
+        pkt_counts[t] = len(fired)
+        for q in fired:
+            spike_mem[routing[q], q] = True
+
+        # ---- synaptic phase: execute slots; merge in ME tree ----
+        for slot in range(depth):
+            valid = pre_l[:, slot] != NOP
+            if not valid.any():
+                continue
+            spus = np.flatnonzero(valid)
+            pres = pre_l[spus, slot]
+            posts = post_l[spus, slot]
+            act = spike_mem[spus, pres]
+            loc = posts - g.n_inputs
+            partial[spus, loc] += np.where(act, w_l[spus, slot], 0)
+            # pre_end: clear spike bit for next timestep
+            pe = pe_l[spus, slot]
+            if pe.any():
+                spike_mem[spus[pe], pres[pe]] = False
+            # post_end: inject ME packets; bufferless merge = same slot
+            poe = poe_l[spus, slot]
+            if poe.any():
+                inj_posts = posts[poe]
+                if check_alignment and len(set(inj_posts.tolist())) != 1:
+                    raise MergeAlignmentError(
+                        f"t={t} slot={slot}: misaligned posts {inj_posts}")
+                q = int(inj_posts[0])
+                lq = q - g.n_inputs
+                current = int(partial[spus[poe], lq].sum())
+                partial[spus[poe], lq] = 0
+                # ---- Neuron Unit: integer LIF on this neuron ----
+                v_q, s_q = lif_step_int(v[lq:lq + 1],
+                                        np.array([current], np.int32), g.lif)
+                v[lq] = v_q[0]
+                if s_q[0]:
+                    out[t, lq] = 1
+        s_prev = out[t]
+
+    stats = {"packet_counts": pkt_counts,
+             "mean_packets_per_step": float(pkt_counts.mean())}
+    return out, v, stats
+
+
+# ---------------------------------------------------------------------------
+# Cycle-accurate timing + energy model.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """FPGA power model with constants fitted to paper Table 2 (DESIGN.md §8).
+
+    P_total = static + dynamic;  dynamic = per-SPU switching cost scaled by
+    datapath width, plus fabric (trees + Neuron Unit) cost.
+    """
+    static_w: float = 0.106                    # XC7Z020 static (Table 2)
+    spu_dyn_w_per_bit: float = 0.000355        # per SPU per datapath bit
+    fabric_dyn_w: float = 0.015
+
+    def total_w(self, hw: HardwareConfig) -> float:
+        bits = hw.weight_bits + hw.potential_bits
+        return (self.static_w + self.fabric_dyn_w
+                + hw.n_spus * bits * self.spu_dyn_w_per_bit)
+
+
+@dataclasses.dataclass
+class CycleReport:
+    cycles_total: int
+    cycles_distribution: int
+    cycles_synaptic: int
+    cycles_overhead: int
+    latency_us: float
+    power_w: float
+    energy_mj: float
+    energy_per_synapse_nj: float
+
+
+class CycleModel:
+    """Per-timestep cycle counting (see module docstring).
+
+    distribution:  n_packets + 1 (end pkt) + tree_depth (MC pipeline)
+    synaptic:      2 * OT_depth  (single-port Unified Memory, §4.4.3)
+    drain:         tree_depth (ME adders) + 4 (NU pipeline) + 1 (end pkt)
+    """
+    NU_PIPELINE = 4
+
+    def __init__(self, hw: HardwareConfig, power: PowerModel | None = None):
+        self.hw = hw
+        self.power = power or PowerModel()
+
+    def timestep_cycles(self, n_packets: int, ot_depth: int
+                        ) -> tuple[int, int, int]:
+        d = self.hw.tree_depth
+        dist = n_packets + 1 + d
+        syn = 2 * ot_depth
+        drain = d + self.NU_PIPELINE + 1
+        return dist, syn, drain
+
+    def run(self, packet_counts: np.ndarray, ot_depth: int,
+            n_synapses_total: int) -> CycleReport:
+        dist = syn = over = 0
+        for n in packet_counts:
+            a, b, c = self.timestep_cycles(int(n), ot_depth)
+            dist += a
+            syn += b
+            over += c
+        total = dist + syn + over
+        lat_us = total / self.hw.clock_mhz
+        p = self.power.total_w(self.hw)
+        e_mj = p * lat_us * 1e-3
+        eps_nj = (e_mj * 1e6 / n_synapses_total) if n_synapses_total else 0.0
+        return CycleReport(total, dist, syn, over, lat_us, p, e_mj, eps_nj)

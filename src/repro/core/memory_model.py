@@ -1,0 +1,96 @@
+"""SupraSNN memory model: Unified-Memory constraint Eq. (9), SPU score
+Eq. (10), and the total-memory expression Eq. (11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """Per-design hardware parameters (paper Table 2 'Hardware' block)."""
+    n_spus: int = 16                 # M (power of two; tree fabric)
+    unified_mem_depth: int = 128     # L   (memory lines per SPU)
+    concentration: int = 3           # K   (weights packed per line)
+    weight_bits: int = 4             # W_W
+    potential_bits: int = 5
+    max_neurons: int = 910           # N   (addressing capacity)
+    max_post_neurons: int = 126      # N_p (Neuron State SRAM depth)
+    clock_mhz: float = 100.0
+
+    def __post_init__(self):
+        assert self.n_spus >= 2 and (self.n_spus & (self.n_spus - 1)) == 0, \
+            "MC/ME trees require a power-of-two SPU count"
+
+    @property
+    def tree_depth(self) -> int:
+        return int(math.log2(self.n_spus))
+
+
+def spu_usage(n_unique_weights: int, n_posts: int, k: int) -> int:
+    """Memory lines used by one SPU: ceil((|Q|+1)/K) + |P| (LHS of Eq. 9)."""
+    return math.ceil((n_unique_weights + 1) / k) + n_posts
+
+
+def spu_score(n_unique_weights: int, n_posts: int, hw: HardwareConfig) -> int:
+    """Eq. (10): L - (ceil((|Q|+1)/K) + |P|). Negative => violation."""
+    return hw.unified_mem_depth - spu_usage(n_unique_weights, n_posts,
+                                            hw.concentration)
+
+
+def scores_from_assignment(weights: np.ndarray, posts: np.ndarray,
+                           assign: np.ndarray, hw: HardwareConfig
+                           ) -> np.ndarray:
+    """Vectorized per-SPU scores for a synapse->SPU assignment.
+
+    weights/posts: [E] synapse attributes; assign: [E] SPU ids.
+    """
+    m = hw.n_spus
+    uq = np.zeros(m, np.int64)
+    up = np.zeros(m, np.int64)
+    # unique (spu, weight) and (spu, post) pairs
+    for arr, out in ((weights, uq), (posts, up)):
+        key = assign.astype(np.int64) * (int(arr.max()) - int(arr.min()) + 1) \
+            + (arr.astype(np.int64) - int(arr.min()))
+        uniq_spu = np.unique(key) // (int(arr.max()) - int(arr.min()) + 1)
+        np.add.at(out, uniq_spu.astype(np.int64), 1)
+    return (hw.unified_mem_depth
+            - (np.ceil((uq + 1) / hw.concentration).astype(np.int64) + up))
+
+
+def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:
+    """Eq. (11): routing + M*(OT + UM) + Neuron State SRAM, in bits."""
+    n, m, np_ = hw.max_neurons, hw.n_spus, hw.max_post_neurons
+    s_um, k, ww = hw.unified_mem_depth, hw.concentration, hw.weight_bits
+    lg = lambda x: math.ceil(math.log2(max(x, 2)))
+    ot_entry = 2 * lg(s_um) + lg(k) + lg(n) + 2
+    routing = n * m
+    ot = op_table_depth * ot_entry
+    um = k * ww * s_um
+    nu = np_ * (lg(n) + k * ww - lg(np_) + 1)
+    return routing + m * (ot + um) + nu
+
+
+def total_memory_kb(hw: HardwareConfig, op_table_depth: int) -> float:
+    return total_memory_bits(hw, op_table_depth) / 8 / 1024
+
+
+def bram_count(hw: HardwareConfig, op_table_depth: int,
+               bram_kbits: int = 18) -> float:
+    """Simple 7-series packing model: each physical memory structure rounds
+    up to half-BRAM (18 Kb) granularity, reported in units of 36 Kb BRAMs."""
+    n, m, np_ = hw.max_neurons, hw.n_spus, hw.max_post_neurons
+    s_um, k, ww = hw.unified_mem_depth, hw.concentration, hw.weight_bits
+    lg = lambda x: math.ceil(math.log2(max(x, 2)))
+    ot_entry = 2 * lg(s_um) + lg(k) + lg(n) + 2
+    halves = 0
+    halves += math.ceil(n * m / (bram_kbits * 1024))                 # routing
+    halves += m * math.ceil(op_table_depth * ot_entry / (bram_kbits * 1024))
+    halves += m * math.ceil(k * ww * s_um / (bram_kbits * 1024))     # UM
+    halves += m * math.ceil(n / (bram_kbits * 1024))                 # spike mem
+    halves += math.ceil(np_ * (lg(n) + k * ww - lg(np_) + 1)
+                        / (bram_kbits * 1024))                       # NU state
+    return halves / 2.0

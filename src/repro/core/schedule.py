@@ -1,0 +1,198 @@
+"""Heuristic scheduling (paper §6.3).
+
+Given a synapse->SPU assignment, produce per-SPU *Operation Tables* whose
+execution order guarantees ME-tree merge correctness: every SPU holding
+synapses of post-neuron p injects p's partial current in the SAME slot.
+
+Algorithm (faithful to the paper, plus an explicit send-slot recurrence
+that guarantees backward-fill feasibility):
+
+  1. Sort post-neurons ascending by max-synapses-on-any-single-SPU
+     (high-fan-in posts transmit last, maximizing slack).
+  2. Walk the sorted order keeping per-SPU cumulative op counts cum_i;
+     post p gets send slot  t_p = max(t_prev + 1, max_i cum_i(p) - 1).
+     (The paper uses consecutive slots, which suffices when #posts >=
+     per-SPU load; the max() generalizes it — with balanced load the depth
+     converges to max_i(total ops_i), exactly the paper's Fig. 13 regime.)
+  3. Fix one synapse of each (SPU, post) group at t_p with Post-End set.
+  4. Backward-fill the remaining synapses into free earlier slots,
+     processing posts in REVERSE send order (EDF-style; provably feasible
+     given the recurrence in 2).
+  5. Set Pre-End on the last op referencing each pre-synaptic neuron.
+  6. Remaining slots are NOPs.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import SNNGraph
+from repro.core.memory_model import HardwareConfig
+
+
+NOP = -1
+
+
+@dataclasses.dataclass
+class OpTables:
+    """The mapped + scheduled program for the whole engine."""
+    depth: int                  # S_OT: operation-table depth == #slots
+    # all arrays are [M, depth]; NOP slots have pre == NOP
+    pre: np.ndarray             # global pre-neuron index
+    post: np.ndarray            # global post-neuron index
+    weight: np.ndarray          # int weight value
+    pre_end: np.ndarray         # bool
+    post_end: np.ndarray        # bool
+    send_slot: dict             # post global idx -> slot
+    send_order: list            # posts in send order
+    assign: np.ndarray          # [E] synapse -> SPU (the partition)
+
+    @property
+    def n_spus(self) -> int:
+        return self.pre.shape[0]
+
+
+def schedule(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig) -> OpTables:
+    m = hw.n_spus
+    e = g.n_synapses
+
+    # group synapses by (spu, post)
+    order = np.lexsort((g.pre, g.post, assign))
+    s_spu, s_post = assign[order], g.post[order]
+
+    posts = np.unique(g.post)
+    # count per (spu, post): c[spu][post]
+    group_keys = s_spu.astype(np.int64) * g.n_neurons + s_post
+    uniq_keys, key_start, key_count = np.unique(
+        group_keys, return_index=True, return_counts=True)
+
+    # per-post max count over SPUs (step 1)
+    post_of_key = (uniq_keys % g.n_neurons).astype(np.int64)
+    cmax: dict[int, int] = {}
+    for pk, c in zip(post_of_key.tolist(), key_count.tolist()):
+        cmax[pk] = max(cmax.get(pk, 0), int(c))
+    send_order = sorted(posts.tolist(), key=lambda q: (cmax[q], q))
+
+    # step 2: send slots via the feasibility recurrence
+    groups: dict[tuple[int, int], np.ndarray] = {}
+    for k, st, c in zip(uniq_keys.tolist(), key_start.tolist(),
+                        key_count.tolist()):
+        spu, pq = int(k // g.n_neurons), int(k % g.n_neurons)
+        groups[(spu, pq)] = order[st:st + c]
+
+    cum = np.zeros(m, np.int64)
+    send_slot: dict[int, int] = {}
+    t_prev = -1
+    for pq in send_order:
+        for spu in range(m):
+            grp = groups.get((spu, pq))
+            if grp is not None:
+                cum[spu] += len(grp)
+        t = max(t_prev + 1, int(cum.max()) - 1)
+        send_slot[pq] = t
+        t_prev = t
+    depth = t_prev + 1 if send_order else 0
+
+    pre_t = np.full((m, depth), NOP, np.int64)
+    post_t = np.full((m, depth), NOP, np.int64)
+    w_t = np.zeros((m, depth), np.int64)
+    pe_t = np.zeros((m, depth), bool)
+    poe_t = np.zeros((m, depth), bool)
+
+    # step 3: pin final synapse of every (spu, post) group at t_p
+    for (spu, pq), grp in groups.items():
+        t = send_slot[pq]
+        syn = int(grp[-1])
+        pre_t[spu, t] = g.pre[syn]
+        post_t[spu, t] = pq
+        w_t[spu, t] = g.weight[syn]
+        poe_t[spu, t] = True
+
+    # free-slot lists per SPU (ascending), minus the pinned send slots
+    free = []
+    for spu in range(m):
+        pinned = {int(send_slot[pq]) for (s, pq) in groups if s == spu}
+        free.append([t for t in range(depth) if t not in pinned])
+
+    # step 4: backward fill, reverse send order
+    for pq in reversed(send_order):
+        t_p = send_slot[pq]
+        for spu in range(m):
+            grp = groups.get((spu, pq))
+            if grp is None or len(grp) == 1:
+                continue
+            rest = grp[:-1]
+            fl = free[spu]
+            # indices of free slots strictly before t_p
+            hi = bisect.bisect_left(fl, t_p)
+            assert hi >= len(rest), (
+                f"schedule infeasible: SPU {spu} post {pq} needs "
+                f"{len(rest)} slots before {t_p}, has {hi}")
+            take = fl[hi - len(rest):hi]
+            del fl[hi - len(rest):hi]
+            for t, syn in zip(take, rest.tolist()):
+                pre_t[spu, t] = g.pre[syn]
+                post_t[spu, t] = pq
+                w_t[spu, t] = g.weight[syn]
+
+    # step 5: Pre-End on the last op touching each pre, per SPU
+    for spu in range(m):
+        seen: set[int] = set()
+        for t in range(depth - 1, -1, -1):
+            pr = int(pre_t[spu, t])
+            if pr != NOP and pr not in seen:
+                pe_t[spu, t] = True
+                seen.add(pr)
+
+    return OpTables(depth, pre_t, post_t, w_t, pe_t, poe_t,
+                    send_slot, send_order, assign.astype(np.int32))
+
+
+def validate_schedule(g: SNNGraph, tables: OpTables) -> None:
+    """Legality checks (DESIGN.md §7.3): raises AssertionError on violation."""
+    m, depth = tables.pre.shape
+    # (a) every synapse appears exactly once
+    placed = []
+    for spu in range(m):
+        for t in range(depth):
+            if tables.pre[spu, t] != NOP:
+                placed.append((int(tables.pre[spu, t]),
+                               int(tables.post[spu, t]),
+                               int(tables.weight[spu, t])))
+    assert len(placed) == g.n_synapses, \
+        f"{len(placed)} ops != {g.n_synapses} synapses"
+    want = sorted(zip(g.pre.tolist(), g.post.tolist(), g.weight.tolist()))
+    assert sorted(placed) == want, "op multiset != synapse multiset"
+
+    # (b) merge alignment: all post_end slots of post p identical across SPUs
+    for spu in range(m):
+        for t in range(depth):
+            if tables.post_end[spu, t]:
+                pq = int(tables.post[spu, t])
+                assert tables.send_slot[pq] == t, \
+                    f"post {pq} sent at {t} != slot {tables.send_slot[pq]}"
+    # exactly one post_end per (spu, post with synapses there)
+    for spu in range(m):
+        pe_posts = tables.post[spu][tables.post_end[spu]]
+        assert len(pe_posts) == len(set(pe_posts.tolist())), \
+            "duplicate post_end in one SPU"
+        have = set(tables.post[spu][tables.pre[spu] != NOP].tolist())
+        assert set(pe_posts.tolist()) == have, "missing post_end"
+
+    # (c) all ops of (spu, post) at slots <= send slot
+    for spu in range(m):
+        for t in range(depth):
+            if tables.pre[spu, t] != NOP:
+                assert t <= tables.send_slot[int(tables.post[spu, t])]
+
+    # (d) pre_end exactly on last reference per (spu, pre)
+    for spu in range(m):
+        last: dict[int, int] = {}
+        for t in range(depth):
+            if tables.pre[spu, t] != NOP:
+                last[int(tables.pre[spu, t])] = t
+        flagged = {int(tables.pre[spu, t]): t
+                   for t in range(depth) if tables.pre_end[spu, t]}
+        assert flagged == last, "pre_end flags wrong"

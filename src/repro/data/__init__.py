@@ -1,0 +1,5 @@
+from repro.data.mnist import synthetic_mnist, mnist_batches, load_mnist
+from repro.data.shd import synthetic_shd, shd_batches
+
+__all__ = ["synthetic_mnist", "mnist_batches", "load_mnist",
+           "synthetic_shd", "shd_batches"]

@@ -1,0 +1,21 @@
+from repro.distributed.sharding import (LOGICAL_RULES_1POD,
+                                        LOGICAL_RULES_2POD, MeshRules,
+                                        logical_constraint, mesh_rules,
+                                        param_pspec, param_shardings,
+                                        input_shardings)
+from repro.distributed.compression import (compress_int8, decompress_int8,
+                                           CompressedGrads,
+                                           compressed_allreduce_spec)
+from repro.distributed.checkpoint import (save_checkpoint, load_checkpoint,
+                                          latest_step, CheckpointManager)
+from repro.distributed.elastic import replan_mesh, reshard_tree
+from repro.distributed.straggler import StragglerMonitor, StepJournal
+
+__all__ = [
+    "LOGICAL_RULES_1POD", "LOGICAL_RULES_2POD", "MeshRules",
+    "logical_constraint", "mesh_rules", "param_pspec", "param_shardings",
+    "input_shardings", "compress_int8", "decompress_int8", "CompressedGrads",
+    "compressed_allreduce_spec", "save_checkpoint", "load_checkpoint",
+    "latest_step", "CheckpointManager", "replan_mesh", "reshard_tree",
+    "StragglerMonitor", "StepJournal",
+]

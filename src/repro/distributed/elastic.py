@@ -1,0 +1,61 @@
+"""Elastic re-meshing: recompute shardings for a changed device count and
+re-place a (checkpointed) state tree onto the new mesh.
+
+On a real cluster the flow after losing a pod / gaining capacity is:
+
+    1. the coordinator picks the largest (pods, data, model) grid that
+       fits the surviving devices           -> ``replan_mesh``
+    2. every host loads the (mesh-agnostic) checkpoint                 ..
+    3. leaves are device_put with the NEW shardings (JAX slices each
+       global array to the device-local shards)  -> ``reshard_tree``
+
+Checkpoints store LOGICAL (global) arrays (checkpoint.py), so resharding
+is purely a placement decision — no data transformation is ever needed.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import (MeshRules, LOGICAL_RULES_1POD,
+                                        LOGICAL_RULES_2POD, param_shardings)
+
+
+def replan_mesh(n_devices: int, *, model_parallel: int = 16,
+                devices=None) -> Mesh:
+    """Largest (pod, data, model) grid for ``n_devices``.
+
+    Keeps TP fixed (model weights are sharded to fit HBM — shrinking TP
+    can OOM), gives the rest to data, and splits off a pod axis when the
+    data extent is >= 32 (two racks' worth).
+    """
+    devices = devices if devices is not None else jax.devices()[:n_devices]
+    assert len(devices) >= model_parallel, \
+        f"need >= {model_parallel} devices, got {len(devices)}"
+    usable = (len(devices) // model_parallel) * model_parallel
+    data = usable // model_parallel
+    if data >= 32 and data % 2 == 0:
+        shape, axes = (2, data // 2, model_parallel), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model_parallel), ("data", "model")
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def rules_for(mesh: Mesh) -> MeshRules:
+    rules = LOGICAL_RULES_2POD if "pod" in mesh.axis_names \
+        else LOGICAL_RULES_1POD
+    return MeshRules(mesh, rules)
+
+
+def reshard_tree(tree, mesh: Mesh, *, shardings=None):
+    """Place a host-resident tree onto ``mesh`` with the standard rules."""
+    r = rules_for(mesh)
+    if shardings is None:
+        shape_tree = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        shardings = param_shardings(shape_tree, r)
+    return jax.device_put(tree, shardings)

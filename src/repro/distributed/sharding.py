@@ -1,0 +1,266 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Model code never mentions mesh axes. It tags activations with LOGICAL axis
+names via ``logical_constraint(x, "batch", "seq", "heads", ...)`` and the
+parameter tree is mapped to PartitionSpecs by path-pattern RULES. A
+``mesh_rules`` context binds logical names -> physical mesh axes; outside
+any context every constraint is a no-op, so single-device CPU tests run
+the exact same model code.
+
+Physical meshes (launch/mesh.py):
+  single-pod  (16, 16)      axes ('data', 'model')
+  multi-pod   (2, 16, 16)   axes ('pod', 'data', 'model')
+
+Logical -> physical (the SupraSNN mapping, DESIGN.md §4):
+  batch   -> ('pod', 'data')   activations/batch dim (DP)
+  fsdp    -> 'data'            parameter/optimizer-state sharding (ZeRO-3)
+  tensor  -> 'model'           TP: heads / mlp / vocab (partial-sum merges
+                               == the paper's ME tree)
+  expert  -> 'model'           EP: MoE expert dim (dispatch == MC tree)
+  seq     -> None              (sequence parallelism is a §Perf iteration:
+                               bind to 'model' in SP variants)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis binding
+# ---------------------------------------------------------------------------
+
+
+class MeshRules:
+    """Binds logical axis names to physical mesh axes for one mesh."""
+
+    def __init__(self, mesh: Mesh, rules: dict[str, Any]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def to_pspec(self, logical: tuple) -> P:
+        phys = []
+        used: set[str] = set()
+        for ax in logical:
+            m = self.rules.get(ax) if ax is not None else None
+            # one physical axis may appear at most once in a PartitionSpec
+            if m is None:
+                phys.append(None)
+            elif isinstance(m, tuple):
+                keep = tuple(a for a in m if a not in used)
+                used.update(keep)
+                phys.append(keep if keep else None)
+            else:
+                if m in used:
+                    phys.append(None)
+                else:
+                    used.add(m)
+                    phys.append(m)
+        return P(*phys)
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.to_pspec(logical))
+
+
+LOGICAL_RULES_1POD = {
+    "batch": "data",
+    "fsdp": "data",
+    "tensor": "model",
+    "expert": "model",
+    "seq": None,
+    "kv_heads": "model",     # only applied when divisible (see param rules)
+}
+
+LOGICAL_RULES_2POD = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "tensor": "model",
+    "expert": "model",
+    "seq": None,
+    "kv_heads": "model",
+}
+
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[MeshRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def mesh_rules(rules: Optional[MeshRules]):
+    """Activate logical->physical binding for model code in this block."""
+    prev = _current()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_constraint(x: jax.Array, *axes) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op when no
+    mesh_rules context is active (single-device tests/smoke runs)."""
+    r = _current()
+    if r is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    # never constrain an axis the shard count does not divide
+    spec = []
+    for dim, ax in zip(x.shape, r.to_pspec(tuple(axes))):
+        size = _axis_size(r.mesh, ax)
+        spec.append(ax if (ax is not None and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec)))
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+# ---------------------------------------------------------------------------
+# Parameter-tree sharding rules (path-pattern based)
+# ---------------------------------------------------------------------------
+
+# Each entry: (path regex, logical axes per dim). First match wins. Paths
+# are '/'-joined pytree keys, e.g. "layers/attn/wq". Rank must match.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # --- embeddings / heads -------------------------------------------------
+    (r"embed_codebooks$", ("tensor", None, "fsdp")),     # [K, V, D] musicgen
+    (r"lm_heads$", (None, "fsdp", "tensor")),            # [K, D, V] musicgen
+    (r"embed$", ("tensor", "fsdp")),                     # [V, D] vocab-parallel
+    (r"lm_head$", ("fsdp", "tensor")),                   # [D, V]
+    # --- attention (stacked [L, ...] — leading layer axis unsharded) -------
+    (r"attn/w[qkv]$", (None, "fsdp", "tensor")),
+    (r"attn/wo$", (None, "tensor", "fsdp")),
+    (r"attn/b[qkv]$", (None, "tensor")),
+    (r"shared_attn/w[qkv]$", ("fsdp", "tensor")),        # zamba2: unstacked
+    (r"shared_attn/wo$", ("tensor", "fsdp")),
+    (r"shared_attn/b[qkv]$", ("tensor",)),
+    # --- MLA ---------------------------------------------------------------
+    (r"attn/wq_a$", (None, "fsdp", "tensor")),
+    (r"attn/wq_b$", (None, "fsdp", "tensor")),
+    (r"attn/wkv_a$", (None, "fsdp", "tensor")),
+    (r"attn/wkv_b$", (None, "fsdp", "tensor")),
+    # --- dense MLP ----------------------------------------------------------
+    (r"mlp/w_(gate|up)$", (None, "fsdp", "tensor")),
+    (r"mlp/w_down$", (None, "tensor", "fsdp")),
+    (r"shared_mlp/w_(gate|up)$", ("fsdp", "tensor")),    # zamba2 shared block
+    (r"shared_mlp/w_down$", ("tensor", "fsdp")),
+    # --- MoE ----------------------------------------------------------------
+    (r"moe/router$", (None, "fsdp", None)),
+    (r"moe/w_(gate|up)$", (None, "expert", "fsdp", None)),   # [L, E, D, F]
+    (r"moe/w_down$", (None, "expert", None, "fsdp")),        # [L, E, F, D]
+    (r"moe/shared/w_(gate|up)$", (None, "fsdp", "tensor")),
+    (r"moe/shared/w_down$", (None, "tensor", "fsdp")),
+    # --- RWKV-6 --------------------------------------------------------------
+    (r"time_mix/w[rkvg]$", (None, "fsdp", "tensor")),
+    (r"time_mix/wo$", (None, "tensor", "fsdp")),
+    (r"time_mix/u$", (None, "tensor", None)),            # [L, H, N]
+    (r"time_mix/lora_w1$", (None, "fsdp", None)),
+    (r"time_mix/lora_w2$", (None, None, None, "fsdp")),
+    (r"time_mix/w1$", (None, "fsdp", None)),
+    (r"time_mix/w2$", (None, None, "fsdp")),
+    (r"channel_mix/wk$", (None, "fsdp", "tensor")),
+    (r"channel_mix/wv$", (None, "tensor", "fsdp")),
+    (r"channel_mix/wr$", (None, "fsdp", "tensor")),
+    # --- Mamba2 ---------------------------------------------------------------
+    (r"in_proj$", (None, "fsdp", "tensor")),
+    (r"out_proj$", (None, "tensor", "fsdp")),
+    (r"conv_w$", (None, None, "tensor")),
+    (r"conv_b$", (None, "tensor")),
+    (r"(a_log|dt_bias|d_skip)$", (None, "tensor")),
+    (r"shared_attn_group/.*", None),                     # handled by attn rules
+]
+
+# 1-D / small tensors (norm scales, biases, mu vectors) -> replicated.
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: tuple, rules: MeshRules) -> P:
+    """PartitionSpec for one parameter by path pattern + divisibility."""
+    for pat, logical in PARAM_RULES:
+        if logical is None:
+            continue
+        if re.search(pat, path):
+            if len(logical) == len(shape):
+                spec = []
+                for dim, ax in zip(shape, rules.to_pspec(logical)):
+                    size = _axis_size(rules.mesh, ax)
+                    spec.append(ax if dim % size == 0 else None)
+                return P(*spec)
+            # rank mismatch (e.g. unstacked variant): try trailing alignment
+            if len(logical) == len(shape) + 1 and logical[0] is None:
+                spec = []
+                for dim, ax in zip(shape,
+                                   rules.to_pspec(tuple(logical[1:]))):
+                    size = _axis_size(rules.mesh, ax)
+                    spec.append(ax if dim % size == 0 else None)
+                return P(*spec)
+    # default: FSDP-shard the largest divisible dim of big tensors
+    if shape and max(shape) >= 1024:
+        best, best_dim = None, 0
+        for i, dim in enumerate(shape):
+            size = _axis_size(rules.mesh, rules.rules.get("fsdp"))
+            if dim % size == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None:
+            spec = [None] * len(shape)
+            spec[best] = rules.rules.get("fsdp")
+            return P(*spec)
+    return P()
+
+
+def param_shardings(params_shape_tree, rules: MeshRules):
+    """NamedSharding tree matching a params (shape-)pytree."""
+    def one(path, leaf):
+        return NamedSharding(
+            rules.mesh, param_pspec(_path_str(path), leaf.shape, rules))
+    return jax.tree_util.tree_map_with_path(one, params_shape_tree)
+
+
+def input_shardings(batch_shape_tree, rules: MeshRules,
+                    batch_axes: Optional[dict] = None):
+    """Shard every input leaf on its batch dim (default dim 0).
+
+    batch_axes: optional {path_suffix: dim} override (e.g. positions [3,B,S]
+    carries batch on dim 1).
+    """
+    batch_axes = batch_axes or {}
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        dim = 0
+        for suffix, d in batch_axes.items():
+            if ps.endswith(suffix):
+                dim = d
+        spec = [None] * len(leaf.shape)
+        ax = rules.rules.get("batch")
+        if leaf.shape and leaf.shape[dim] % _axis_size(rules.mesh, ax) == 0:
+            spec[dim] = ax
+        return NamedSharding(rules.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch_shape_tree)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spike_accum_ref(spikes: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Dense reference of the synaptic accumulation I = S @ W.
+
+    spikes:  [B, N_pre]  (0/1, any numeric dtype)
+    weights: [N_pre, N_post]
+    returns: [B, N_post] in f32 (or int32 for integer inputs).
+    """
+    acc = jnp.int32 if jnp.issubdtype(weights.dtype, jnp.integer) else jnp.float32
+    return jnp.dot(spikes.astype(acc), weights.astype(acc),
+                   preferred_element_type=acc)
+
+
+def lif_update_ref(v: jnp.ndarray, current: jnp.ndarray, alpha: float,
+                   v_th: float, v_reset: float
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused LIF membrane update (paper Eqs. 2, 4, 5).
+
+    v, current: [N] f32. Returns (v_next, spikes) with spikes in {0,1} f32.
+    """
+    v_upd = (1.0 - alpha) * v + current
+    s = (v_upd >= v_th).astype(v.dtype)
+    v_next = jnp.where(s > 0, jnp.asarray(v_reset, v.dtype), v_upd)
+    return v_next, s
+
+
+def wkv6_ref(r, k, v, w_log, u, state0):
+    """Sequential WKV-6 oracle (token-by-token exact recurrence).
+
+    r/k/v/w_log [B, S, H, N]; u [H, N]; state0 [B, H, N, N].
+    """
+    import jax
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bhk,bhkn->bhn", rt, st) \
+            + jnp.einsum("bhk,hk,bhk->bh", rt, u, kt)[..., None] * vt
+        st = st * jnp.exp(wt)[..., None] \
+            + jnp.einsum("bhk,bhn->bhkn", kt, vt)
+        return st, y
+
+    tr = lambda x: x.transpose(1, 0, 2, 3)
+    st, ys = jax.lax.scan(
+        step, state0.astype(jnp.float32),
+        (tr(r.astype(jnp.float32)), tr(k.astype(jnp.float32)),
+         tr(v.astype(jnp.float32)), tr(w_log.astype(jnp.float32))))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), st

@@ -1,0 +1,1 @@
+# Launch layer: production mesh builders, dry-run driver, train/serve CLIs.

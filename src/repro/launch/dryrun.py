@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lower + compile every (architecture x input-shape x mesh) cell against the
+production mesh built from 512 placeholder host devices, print
+``memory_analysis()`` / ``cost_analysis()``, parse the collective schedule
+out of the compiled HLO, and derive the three roofline terms
+(EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # whole grid
+
+NOTE the XLA_FLAGS export above is the FIRST executable line — jax locks
+the device count on first init, and only the dry-run wants 512 fake
+devices (smoke tests and benches must see 1).
+"""
+import argparse
+import functools
+import json
+import re
+import subprocess
+import sys
+import time
+
+# TPU v5e hardware constants (assignment §Roofline)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (effective, 1 link)
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             profile=None, micro=None, seq_shard=None,
+             unroll_decode: bool = False,
+             verbose: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, applicable, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import batch_specs, decode_specs, model_specs
+    from repro.launch.strategy import make_mesh_rules, pick_strategy
+    from repro.train.steps import (make_prefill_step, make_serve_step,
+                                   make_train_step)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    assert applicable(cfg, shape_name), \
+        f"{arch} x {shape_name} skipped (full attention, DESIGN.md)"
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    strat = pick_strategy(cfg, shape, multi_pod=multi,
+                          override_profile=profile, override_micro=micro)
+    if seq_shard:
+        strat.logical_rules["seq"] = "model"
+    rules = make_mesh_rules(mesh, strat)
+
+    shards_of = functools.partial(jax.tree.map, lambda s: s.sharding)
+    t0 = time.time()
+    if shape.kind == "train":
+        pspecs, ospecs = model_specs(cfg, rules, strat.hparams)
+        batch = batch_specs(cfg, shape, rules)
+        step = make_train_step(cfg, rules, strat.hparams)
+        # out_shardings pin the donated (params, opt) layout — without them
+        # the optimizer's block-quantize reshapes let GSPMD replicate the
+        # int8 state (EXPERIMENTS.md §Perf, deepseek iteration 0)
+        lowered = jax.jit(
+            step, donate_argnums=(0, 1),
+            out_shardings=(shards_of(pspecs), shards_of(ospecs), None)
+        ).lower(pspecs, ospecs, batch)
+    elif shape.kind == "prefill":
+        pspecs, _ = model_specs(cfg, rules)
+        batch = batch_specs(cfg, shape, rules)
+        step = make_prefill_step(cfg, rules)
+        lowered = jax.jit(step).lower(pspecs, batch)
+    else:  # decode
+        pspecs, _ = model_specs(cfg, rules)
+        tokens, state = decode_specs(cfg, shape, rules,
+                                     unrolled=unroll_decode)
+        step = make_serve_step(cfg, rules, unroll=unroll_decode)
+        lowered = jax.jit(
+            step, donate_argnums=(2,),
+            out_shardings=(None, shards_of(state))
+        ).lower(pspecs, tokens, state)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # NOTE: cost_analysis counts while bodies ONCE (scan trip counts are
+    # ignored) — hlo_analysis walks the call graph with trip multipliers.
+    from repro.launch.hlo_analysis import analyze
+    t0 = time.time()
+    hlo = compiled.as_text()
+    if os.environ.get("DRYRUN_KEEP_HLO"):
+        import gzip
+        hdir = os.environ.get("DRYRUN_HLO_DIR", "results/hlo")
+        os.makedirs(hdir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hdir, f"{arch}_{shape_name}_{mesh_kind}.hlo.gz"), "wt") as f:
+            f.write(hlo)
+    acc = analyze(hlo)
+    t_analyze = time.time() - t0
+    del hlo
+    coll = acc["coll"]
+
+    chips = mesh.devices.size
+    flops_dev = float(acc["flops"])
+    bytes_dev = float(acc["bytes"])
+    coll_dev = float(coll["total_bytes"])
+
+    b, s = shape.global_batch, shape.seq_len
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * b * s
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * b * s
+    else:
+        model_flops = 2 * n_active * b
+    model_flops_dev = model_flops / chips
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_coll)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": int(chips), "strategy": strat.name,
+        "n_micro": strat.hparams.n_micro,
+        "params": int(cfg.n_params()), "active_params": int(n_active),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "alias_bytes": mem.alias_size_in_bytes,
+            # arguments alias outputs for donated params/state; peak HBM =
+            # live arguments + temps
+            "hbm_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_flops_no_trip": float(cost.get("flops", 0.0)),
+                 "xla_bytes_no_trip": float(
+                     cost.get("bytes accessed", 0.0))},
+        "bytes_by_op": dict(sorted(acc["bytes_by_op"].items(),
+                                   key=lambda kv: -kv[1])[:20]),
+        "collectives": coll,
+        "roofline": {
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": model_flops,
+            "model_flops_per_device": model_flops_dev,
+            "useful_flop_ratio": (model_flops_dev / flops_dev
+                                  if flops_dev else 0.0),
+            "roofline_fraction": ((model_flops_dev / PEAK_FLOPS) / bound
+                                  if bound else 0.0),
+        },
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_kind} "
+              f"[{strat.name}, {chips} chips] ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops/dev={flops_dev:.3e} "
+              f"bytes/dev={bytes_dev:.3e}")
+        print(f"  hbm estimate: "
+              f"{result['memory']['hbm_estimate_bytes']/2**30:.2f} GiB/chip")
+        print(f"  collectives: " + ", ".join(
+            f"{k}:{v['bytes']/2**20:.1f}MiB/{v['count']}"
+            for k, v in coll.items() if isinstance(v, dict) and v["count"]))
+        r = result["roofline"]
+        print(f"  roofline: compute {r['t_compute_s']*1e3:.2f}ms | memory "
+              f"{r['t_memory_s']*1e3:.2f}ms | collective "
+              f"{r['t_collective_s']*1e3:.2f}ms -> {r['dominant']}-bound, "
+              f"useful-flop ratio {r['useful_flop_ratio']:.2f}, "
+              f"roofline fraction {r['roofline_fraction']:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--profile", default=None,
+                    help="override strategy profile (fsdp | tp_ep)")
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="bind logical 'seq' axis to 'model' (SP variant)")
+    ap.add_argument("--unroll-decode", action="store_true",
+                    help="unrolled-layer decode, per-layer cache leaves")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full (arch x shape x mesh) grid as "
+                         "subprocesses")
+    ap.add_argument("--meshes", default="single,multi")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        from repro.configs import all_cells
+        cells = all_cells()
+        failures = []
+        for mesh_kind in args.meshes.split(","):
+            for arch, shape in cells:
+                tag = f"{arch}_{shape}_{mesh_kind}"
+                out_file = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_file):
+                    print(f"[skip] {tag} (cached)")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", mesh_kind, "--out", args.out]
+                print(f"[run ] {tag}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}\n{r.stdout[-2000:]}"
+                          f"\n{r.stderr[-4000:]}", flush=True)
+                else:
+                    print(r.stdout.rstrip(), flush=True)
+        print(f"\n{len(cells) * 2 - len(failures)} ok, "
+              f"{len(failures)} failed: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    result = run_cell(args.arch, args.shape, args.mesh,
+                      profile=args.profile, micro=args.micro,
+                      seq_shard=args.seq_shard,
+                      unroll_decode=args.unroll_decode)
+    tag = f"{args.arch}_{args.shape}_{args.mesh}"
+    suffix = ""
+    if args.profile or args.micro or args.seq_shard or args.unroll_decode:
+        suffix = f"__{args.profile or ''}m{args.micro or ''}" + \
+            ("sp" if args.seq_shard else "") + \
+            ("ur" if args.unroll_decode else "")
+    with open(os.path.join(args.out, tag + suffix + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (assignment step 2).
+
+For a training cell that is {tokens, labels(, positions)}; for prefill
+{tokens(, positions)}; for decode it is (tokens [B, 1], decode-state) with
+KV capacity = shape.seq_len. Param/optimizer trees come from
+``jax.eval_shape`` over the real initializers, so the dry-run lowers the
+EXACT program the launcher would run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import (MeshRules, input_shardings,
+                                        param_shardings)
+from repro.models import model as M
+from repro.train.steps import TrainHParams, init_opt_state
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                rules: Optional[MeshRules]) -> dict:
+    """Host-side input specs for train/prefill cells."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    batch: dict[str, Any] = {"tokens": _sds(tok_shape, jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sds(tok_shape, jnp.int32)
+    if cfg.mrope_sections:
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    if rules is not None:
+        sh = input_shardings(batch, rules, batch_axes={"positions": 1})
+        batch = jax.tree.map(
+            lambda spec, shd: _sds(spec.shape, spec.dtype, shd), batch, sh)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec,
+                 rules: Optional[MeshRules],
+                 unrolled: bool = False) -> tuple:
+    """(tokens, state) specs for a serve_step cell: one new token against
+    a cache of capacity seq_len (filled to seq_len - 1)."""
+    b, cap = shape.global_batch, shape.seq_len
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks else (b, 1)
+    state = jax.eval_shape(
+        functools.partial(M.init_decode_state, cfg, b, cap,
+                          unrolled=unrolled))
+    tokens = _sds(tok_shape, jnp.int32)
+    if rules is not None:
+        tokens = _sds(tok_shape, jnp.int32,
+                      NamedSharding(rules.mesh,
+                                    P(rules.rules.get("batch"))
+                                    if b % _size(rules, "batch") == 0
+                                    else P()))
+        state = jax.tree.map(
+            lambda l: _sds(l.shape, l.dtype, _state_sharding(l, rules, b)),
+            state)
+    return tokens, state
+
+
+def _size(rules: MeshRules, logical: str) -> int:
+    ax = rules.rules.get(logical)
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= rules.mesh.shape[a]
+        return n
+    return rules.mesh.shape[ax]
+
+
+def _state_sharding(leaf, rules: MeshRules, b: int) -> NamedSharding:
+    """Decode-state placement heuristic.
+
+    Batch lives at dim 1 for stacked [L, B, ...] caches, dim 0 for
+    unrolled per-layer [B, ...] caches -> shard it over 'batch' when
+    divisible. The dim two past batch (kv-heads of GQA caches, latent
+    rank of MLA caches, head/channel dims of recurrent states) -> 'tensor'
+    when divisible; when it does NOT divide (GQA with few KV heads), shard
+    the CAPACITY dim (batch+1) over 'tensor' instead — flash-decode style:
+    every model shard scans 1/16th of the context and the softmax merges
+    partials with tiny all-reduces. Without this GSPMD all-gathers the
+    whole cache per layer (observed: 150 GiB/chip, stablelm decode_32k).
+    """
+    spec: list = [None] * len(leaf.shape)
+    bdim = 0 if (leaf.shape and leaf.shape[0] == b) else 1
+    if len(leaf.shape) > bdim:
+        ax = rules.rules.get("batch")
+        if ax is not None and leaf.shape[bdim] % _size(rules, "batch") == 0:
+            spec[bdim] = ax
+    ax = rules.rules.get("tensor")
+    if ax is not None and len(leaf.shape) >= bdim + 3:
+        if leaf.shape[bdim + 2] % _size(rules, "tensor") == 0:
+            spec[bdim + 2] = ax
+        elif len(leaf.shape) >= bdim + 4 and \
+                leaf.shape[bdim + 1] % _size(rules, "tensor") == 0:
+            spec[bdim + 1] = ax
+    return NamedSharding(rules.mesh, P(*spec))
+
+
+def model_specs(cfg: ArchConfig, rules: Optional[MeshRules],
+                hp: Optional[TrainHParams] = None) -> tuple:
+    """(param specs, opt-state specs) via eval_shape — zero allocation."""
+    pshapes = jax.eval_shape(
+        lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    if rules is not None:
+        psh = param_shardings(pshapes, rules)
+        pspecs = jax.tree.map(
+            lambda l, s: _sds(l.shape, l.dtype, s), pshapes, psh)
+    else:
+        pspecs = pshapes
+    if hp is None:
+        return pspecs, None
+    oshapes = jax.eval_shape(functools.partial(init_opt_state, hp=hp),
+                             pshapes)
+    if rules is not None:
+        osh = _opt_shardings(oshapes, pshapes, rules)
+        ospecs = jax.tree.map(
+            lambda l, s: _sds(l.shape, l.dtype, s), oshapes, osh)
+    else:
+        ospecs = oshapes
+    return pspecs, ospecs
+
+
+def _opt_shardings(opt_shapes, param_shapes, rules: MeshRules):
+    """Adam m/v mirror the param shardings. int8-quantized moments are
+    [..., F/B, B] (last-axis block split, optimizer/adam.py), so their
+    pspec = the param's leading-dim spec + (None, None); f32 fallbacks and
+    same-shape moments reuse the param spec; [0]-sentinel scales and the
+    step counter are replicated."""
+    psh = param_shardings(param_shapes, rules)
+
+    def axsz(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= rules.mesh.shape[a]
+            return n
+        return rules.mesh.shape[ax]
+
+    def follow(tree):
+        if tree is None:
+            return None
+        def one(leaf, p_leaf, p_sh):
+            if leaf.shape == p_leaf.shape:             # f32 moment
+                return p_sh
+            if len(leaf.shape) == len(p_leaf.shape) + 1:
+                r = len(p_leaf.shape)
+                spec = list(p_sh.spec) + [None] * (r - len(p_sh.spec))
+                dropped = spec[r - 1]                  # axis on the block dim
+                spec = spec[:r - 1] + [None, None]
+                if dropped is not None:
+                    # re-home the dropped axis: merge into the first
+                    # leading dim that stays divisible (keeps the moment as
+                    # sharded as the parameter — see adam.py layout note)
+                    for i in range(len(spec)):
+                        cur = spec[i]
+                        cand = ((tuple(cur) if isinstance(cur, tuple)
+                                 else (cur,)) if cur else ()) + \
+                            (tuple(dropped) if isinstance(dropped, tuple)
+                             else (dropped,))
+                        if leaf.shape[i] % (axsz(cur) * axsz(dropped)) == 0:
+                            spec[i] = cand if len(cand) > 1 else cand[0]
+                            break
+                return NamedSharding(rules.mesh, P(*spec))
+            return NamedSharding(rules.mesh, P())      # sentinel / scalar
+        return jax.tree.map(one, tree, param_shapes, psh)
+
+    rep = NamedSharding(rules.mesh, P())
+    return type(opt_shapes)(
+        step=rep,
+        m=follow(opt_shapes.m), v=follow(opt_shapes.v),
+        m_scale=follow(opt_shapes.m_scale),
+        v_scale=follow(opt_shapes.v_scale))

@@ -1,0 +1,111 @@
+"""Per-(arch x shape) sharding strategy — the LM-scale analogue of the
+paper's partitioning framework.
+
+SupraSNN's partitioner maps synapses to SPUs maximizing balance subject to
+the Unified-Memory constraint Eq. (9). Here the "synapses" are parameter
+tiles, the "SPUs" are chips, and the constraint is HBM. Like the paper we
+pick the most-balanced feasible mapping per workload (napkin math in
+EXPERIMENTS.md §Dry-run), not one global scheme:
+
+  fsdp   batch+params sharded over EVERY chip (256/512-way ZeRO-3),
+         no tensor parallelism. Minimal activation + param memory; per-
+         layer all-gather of weights (prefetchable). The right regime for
+         <=13B dense models at 1M-token batches.
+  tp_ep  2D: batch over 'data', tensor+expert over 'model'. The regime
+         for MoE (expert dim wants its own axis: dispatch/combine == the
+         paper's MC/ME trees) and for inference (KV cache sharded over
+         heads; weights stationary).
+
+Shape kind selects train vs inference strategy; family selects fsdp vs
+tp_ep for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import MeshRules
+from repro.train.steps import TrainHParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    logical_rules: dict
+    hparams: TrainHParams
+
+
+def _rules(profile: str, multi_pod: bool) -> dict:
+    if profile == "fsdp":
+        if multi_pod:
+            # global batch (256) < devices (512): shard batch over one
+            # pod's chips and the SEQUENCE over the pod axis (cross-pod
+            # sequence parallelism — the KV all-gather rides the slow
+            # inter-pod links once per layer and overlaps with compute)
+            return {"batch": ("data", "model"),
+                    "fsdp": ("pod", "data", "model"), "tensor": None,
+                    "expert": None, "seq": "pod", "kv_heads": None}
+        all_axes = ("data", "model")
+        return {"batch": all_axes, "fsdp": all_axes, "tensor": None,
+                "expert": None, "seq": None, "kv_heads": None}
+    if profile == "tp_ep":
+        batch = ("pod", "data") if multi_pod else "data"
+        fsdp = ("pod", "data") if multi_pod else "data"
+        return {"batch": batch, "fsdp": fsdp, "tensor": "model",
+                "expert": "model", "seq": None, "kv_heads": "model"}
+    if profile == "tp_ep_full":
+        # §Perf (deepseek iteration): experts sharded over EVERY chip
+        # (model x data = whole-expert ownership) — expert weights are
+        # never fsdp-gathered; tokens move instead (all-to-all dispatch,
+        # the MC-tree pattern). Kills the n_micro-times weight re-gather.
+        batch = ("pod", "data") if multi_pod else "data"
+        return {"batch": batch, "fsdp": ("pod", "data") if multi_pod
+                else "data", "tensor": "model",
+                "expert": ("model", "data"), "seq": None,
+                "kv_heads": "model"}
+    if profile == "tp_serve":
+        # §Perf (decode iteration): INFERENCE wants stationary weights —
+        # no ZeRO sharding to gather per token; params live tensor-sharded
+        # (model axis), replicated over data. HBM cost: params/16 per chip.
+        batch = ("pod", "data") if multi_pod else "data"
+        return {"batch": batch, "fsdp": None, "tensor": "model",
+                "expert": "model", "seq": None, "kv_heads": "model"}
+    raise ValueError(profile)
+
+
+def pick_strategy(cfg: ArchConfig, shape: ShapeSpec, *,
+                  multi_pod: bool = False,
+                  override_profile: Optional[str] = None,
+                  override_micro: Optional[int] = None) -> Strategy:
+    """Default = napkin-math-feasible, balance-max choice per cell."""
+    is_moe = cfg.moe is not None
+    if shape.kind == "train":
+        profile = override_profile or ("tp_ep" if is_moe else "fsdp")
+        # microbatches: sized so remat'd layer-boundary activations fit
+        # (tokens_local/n_micro * d_model * n_layers * 2B <~ 4 GB)
+        if override_micro is not None:
+            n_micro = override_micro
+        elif cfg.name.startswith("deepseek"):
+            n_micro = 8
+        elif is_moe:
+            n_micro = 4
+        else:
+            n_micro = 1
+        hp = TrainHParams(
+            n_micro=n_micro,
+            accum_dtype=(jnp.bfloat16 if cfg.name.startswith("deepseek")
+                         else jnp.float32),
+            quantized_opt_state=cfg.name.startswith("deepseek"),
+            loss_chunk=512)
+    else:
+        profile = override_profile or "tp_ep"
+        hp = TrainHParams()
+    return Strategy(profile, _rules(profile, multi_pod), hp)
+
+
+def make_mesh_rules(mesh, strategy: Strategy) -> MeshRules:
+    return MeshRules(mesh, strategy.logical_rules)

@@ -1,0 +1,435 @@
+"""Transformer building blocks for the assigned-architecture pool.
+
+Pure JAX (no flax): parameters are plain dict pytrees created by ``init_*``
+functions; every leaf carries a *logical sharding axis* spec in a parallel
+pytree (see ``repro.distributed.sharding``) so the same model code runs on a
+laptop CPU and a 512-chip mesh.
+
+Design rules (they matter for the multi-pod dry-run):
+
+* layers are STACKED on a leading axis and executed with ``lax.scan`` —
+  a 61-layer model lowers to one scanned HLO body, keeping compile time
+  and code size flat in depth;
+* attention over long sequences is CHUNKED (online-softmax flash pattern,
+  ``lax.scan`` over KV blocks) so a 32k-token prefill never materializes
+  the [S, S] score matrix;
+* everything computes in bf16 with f32 softmax/norm/accumulation islands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Params = dict  # nested dict pytree of jnp arrays
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, in_axis=-2, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init (matches common LM pretraining setups)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def _embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def apply_norm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings: standard / partial / 2D (chatglm) / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    """inv_freq [dim//2] f32."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_dim: Optional[int] = None,
+               mrope_sections: Optional[tuple] = None) -> jax.Array:
+    """Rotate ``x`` [..., S, H, D] by ``positions``.
+
+    positions: [..., S] int32 for 1-D RoPE, or [3, ..., S] for M-RoPE
+    (t/h/w position triplets, qwen2-vl arXiv:2409.12191).
+    rotary_dim: rotate only the first ``rotary_dim`` features (partial RoPE,
+    stablelm/glm style); the remainder passes through unchanged.
+    """
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+
+    inv_freq = rope_frequencies(rd, theta)                     # [rd/2]
+    if mrope_sections is not None:
+        # M-RoPE: split the rd/2 frequency slots into (t, h, w) sections,
+        # each driven by its own position stream.
+        assert positions.shape[0] == 3, "M-RoPE needs [3, ...] positions"
+        freqs = []
+        start = 0
+        for sec, pos in zip(mrope_sections, positions):
+            f = pos[..., None].astype(jnp.float32) * inv_freq[start:start + sec]
+            freqs.append(f)
+            start += sec
+        freqs = jnp.concatenate(freqs, axis=-1)                # [..., S, rd/2]
+    else:
+        freqs = positions[..., None].astype(jnp.float32) * inv_freq
+
+    cos = jnp.cos(freqs)[..., None, :]                         # [..., S, 1, rd/2]
+    sin = jnp.sin(freqs)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+    return jnp.concatenate([rot, x_pass], axis=-1) if rd < d else rot
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jax.Array:
+    """MusicGen-style additive sinusoidal embedding [S, D] f32."""
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq_len, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure JAX oracle.
+# The Pallas TPU kernel lives in repro.kernels.flash_attention; this is the
+# reference path and also what the dry-run lowers (same memory behaviour:
+# no [S, S] materialization).
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, chunk: int = 1024,
+                      scale: Optional[float] = None,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention.
+
+    q [B, Sq, H, Dh], k/v [B, Sk, Hkv, Dh] (GQA broadcast on the fly).
+    Scans over KV chunks, carrying (m, l, acc) — the flash-attention
+    recurrence — so peak memory is O(Sq * chunk), not O(Sq * Sk).
+    q_offset: absolute position of q[0] (decode: Sk_cached).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]                        # may differ from dh (MLA)
+    rep = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    qf = (q.astype(jnp.float32) * scale)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp                       # [B, C, Hkv, Dh], chunk idx
+        kb = jnp.repeat(kb, rep, axis=2).astype(jnp.float32)
+        vb = jnp.repeat(vb, rep, axis=2).astype(jnp.float32)
+        # scores [B, H, Sq, C]
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kb)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        valid = k_pos < sk                      # mask padding
+        if causal:
+            valid = valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(valid[None, None], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqc,bchd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # [B, Sq, H, Dh]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ArchConfig, key: jax.Array) -> Params:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * dh)),
+        "wk": _dense_init(ks[1], (d, hkv * dh)),
+        "wv": _dense_init(ks[2], (d, hkv * dh)),
+        "wo": _dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              positions: jax.Array,
+              kv_cache: Optional[tuple] = None,
+              cache_len: Optional[jax.Array] = None,
+              chunk: int = 1024,
+              return_kv: bool = False) -> tuple[jax.Array, Optional[tuple]]:
+    """GQA attention. x [B, S, D].
+
+    Training/prefill: kv_cache None -> causal self-attention over x; with
+    ``return_kv`` the rotated (k, v) are returned as a capacity-S cache.
+    Decode: kv_cache (k [B, Smax, Hkv, Dh], v) with ``cache_len`` valid
+    entries; x is the new token(s); returns the updated cache.
+    """
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    rd = int(dh * cfg.partial_rotary)
+    if rd > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, rd, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, rd, cfg.mrope_sections)
+
+    if kv_cache is None:
+        out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+        new_cache = ((k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+                     if return_kv else None)
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_len, axis=1)
+        # decode: grouped-query einsum — the KV cache is NEVER repeated to
+        # full head count nor cast to f32 (at 32k x B=128 that repeat would
+        # materialize hundreds of GB); the rep axis lives only on q/scores.
+        smax = ck.shape[1]
+        rep = h // hkv
+        qg = q.reshape(b, s, hkv, rep, dh) * (1.0 / math.sqrt(dh))
+        scores = jnp.einsum("bsgrd,bkgd->bgrsk", qg, ck,
+                            preferred_element_type=jnp.float32)
+        k_pos = jnp.arange(smax)
+        valid = k_pos[None, :] <= (cache_len + jnp.arange(s))[:, None]
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgrsk,bkgd->bsgrd", probs, cv,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, s, h, dh).astype(x.dtype)
+        new_cache = (ck, cv)
+
+    out = out.reshape(b, s, h * dh) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, key: jax.Array) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_a_norm": init_rmsnorm(m.q_lora_rank),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, h * qk_dim)),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "kv_a_norm": init_rmsnorm(m.kv_lora_rank),
+        "wkv_b": _dense_init(ks[3], (m.kv_lora_rank,
+                                     h * (m.qk_nope_head_dim + m.v_head_dim))),
+        "wo": _dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  positions: jax.Array,
+                  kv_cache: Optional[tuple] = None,
+                  cache_len: Optional[jax.Array] = None,
+                  chunk: int = 1024,
+                  return_kv: bool = False) -> tuple[jax.Array, Optional[tuple]]:
+    """MLA: queries/keys/values through low-rank latents; the KV cache holds
+    only the compressed latent (kv_lora_rank) + decoupled RoPE key — the
+    paper's main KV-memory saving.
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(p["q_a_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                               # [B, S, r + rope_d]
+    latent = rmsnorm(p["kv_a_norm"], kv_a[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., m.kv_lora_rank:][..., None, :],
+                        positions, cfg.rope_theta)      # [B, S, 1, rope_d]
+
+    if kv_cache is None:
+        # train/prefill: expand latents to full K/V once (seq-parallel path)
+        kv = latent @ p["wkv_b"]
+        kv = kv.reshape(b, s, h, nope + vdim)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope.astype(k_nope.dtype),
+                                              (b, s, h, rope_d))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(q_full, k, v, causal=True, chunk=chunk,
+                                scale=1.0 / math.sqrt(nope + rope_d))
+        out = out.reshape(b, s, h * vdim) @ p["wo"]
+        new_cache = ((latent.astype(jnp.bfloat16),
+                      k_rope[:, :, 0].astype(jnp.bfloat16))
+                     if return_kv else None)
+        return out, new_cache
+
+    # decode: WEIGHT-ABSORBED attention over the compressed latent cache.
+    # Never expands the cache to per-head K/V (at 32k x B=128 that would be
+    # ~200 GB); instead absorbs wkv_b into the query/output sides:
+    #   scores = (q_nope W_bk^T) . latent + q_rope . k_rope
+    #   out    = (probs . latent) W_bv
+    # This is the MLA decode identity from arXiv:2412.19437 §2.1.
+    c_lat, c_kr = kv_cache
+    c_lat = jax.lax.dynamic_update_slice_in_dim(
+        c_lat, latent.astype(c_lat.dtype), cache_len, axis=1)
+    c_kr = jax.lax.dynamic_update_slice_in_dim(
+        c_kr, k_rope[:, :, 0].astype(c_kr.dtype), cache_len, axis=1)
+    new_cache = (c_lat, c_kr)
+    kv_len = c_lat.shape[1]
+
+    w_b = p["wkv_b"].reshape(m.kv_lora_rank, h, nope + vdim)
+    w_bk, w_bv = w_b[..., :nope], w_b[..., nope:]
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_bk)       # [B,s,H,r]
+    scores = (jnp.einsum("bshr,bkr->bhsk", q_abs, c_lat,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,bkd->bhsk", q_rope, c_kr,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(kv_len)[None, :] <= \
+        (cache_len + jnp.arange(s))[:, None]
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat_out = jnp.einsum("bhsk,bkr->bshr", probs, c_lat,
+                         preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshr,rhv->bshv", lat_out.astype(x.dtype), w_bv)
+    out = out.reshape(b, s, h * vdim) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(d: int, d_ff: int, style: str, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 3)
+    if style == "swiglu":
+        return {"w_gate": _dense_init(ks[0], (d, d_ff)),
+                "w_up": _dense_init(ks[1], (d, d_ff)),
+                "w_down": _dense_init(ks[2], (d_ff, d))}
+    return {"w_up": _dense_init(ks[0], (d, d_ff)),
+            "w_down": _dense_init(ks[1], (d_ff, d))}
+
+
+def mlp(p: Params, x: jax.Array, style: str) -> jax.Array:
+    if style == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(vocab: int, d: int, key: jax.Array) -> jax.Array:
+    return _embed_init(key, (vocab, d))
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    """Logits in f32 (loss stability)."""
+    w = table_or_head.T if tied else table_or_head
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32))

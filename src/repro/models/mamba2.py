@@ -1,0 +1,198 @@
+"""Mamba-2 SSD block (arXiv:2405.21060) — the state-space half of Zamba2
+(arXiv:2411.15242), the [hybrid] member of the assigned pool.
+
+SupraSNN mapping (DESIGN.md §4): the in/out projections and the chunked
+SSD matmuls are the "synaptic" half (dense, MXU-bound, sharded over
+'model'); the [H, P, N] recurrent state hop between chunks is the
+"neuronal" half — small, stateful, sequential. Zamba2's *shared* attention
+block (one physical block time-multiplexed across depth) mirrors the
+paper's centralized Neuron Unit.
+
+Two execution paths, like rwkv.py:
+
+* ``ssd_chunked`` — matrix-form SSD within chunks (quadratic in the chunk,
+  linear across chunks via a scanned state), used for train/prefill;
+* ``ssd_step`` — exact single-token recurrence for decode (O(1) state,
+  enabling the long_500k cell).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
+
+
+def init_mamba2_block(cfg: ArchConfig, key: jax.Array) -> Params:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    ks = jax.random.split(key, 6)
+    # single fused in-projection: [z, x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * s.d_state + n_heads
+    return {
+        "in_proj": _dense_init(ks[0], (d, d_in_proj)),
+        # depthwise conv over the (x, B, C) channels
+        "conv_w": (jax.random.normal(ks[1],
+                                     (s.d_conv, d_inner + 2 * s.d_state),
+                                     jnp.float32) * 0.1),
+        "conv_b": jnp.zeros((d_inner + 2 * s.d_state,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        # A is per-head scalar (SSD restriction), stored as log
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": _dense_init(ks[2], (d_inner, d)),
+        "ln": init_rmsnorm(d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, a_log, b, c, state, chunk: int = 64):
+    """Chunked SSD (Mamba-2 alg. 1, matrix form).
+
+    x   [B, S, H, P]   inputs per head
+    dt  [B, S, H]      softplus'd step sizes (>= 0)
+    a_log [H]          log(-A) per head; decay = exp(-exp(a_log) * dt)
+    b   [B, S, N]      input->state projection  (shared across heads, G=1)
+    c   [B, S, N]      state->output projection
+    state [B, H, P, N] carried SSM state.
+    Returns (y [B, S, H, P], state').
+
+    Discrete recurrence per head/channel:
+      S_t = exp(a_t) S_{t-1} + dt_t * x_t b_t^T,   a_t = -exp(a_log) dt_t
+      y_t = S_t c_t  (+ D x_t skip added by the caller)
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    cs = chunk
+
+    def split(t, shape):
+        return t.reshape(bsz, nc, cs, *shape).transpose(1, 0, 2,
+                                                        *range(3, 3 + len(shape)))
+
+    xc = split(x, (h, p))
+    dtc = split(dt, (h,))
+    bc = split(b, (n,))
+    cc = split(c, (n,))
+    neg_a = jnp.exp(a_log.astype(jnp.float32))          # [H] = -A > 0
+
+    def body(st, inp):
+        xb, dtb, bb, cb = [t.astype(jnp.float32) for t in inp]
+        # log decays within the chunk
+        la = -neg_a[None, None, :] * dtb                 # [B, C, H] (<= 0)
+        cum = jnp.cumsum(la, axis=1)                     # inclusive logA_t
+        # inter-chunk contribution: y_t += (exp(cum_t) * c_t) . S_0
+        y = jnp.einsum("bch,bcn,bhpn->bchp", jnp.exp(cum), cb, st)
+        # intra-chunk, causal (t >= s): ratio exp(cum_t - cum_s)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # [B, T, S, H]
+        mask = jnp.arange(cs)[:, None] >= jnp.arange(cs)[None, :]
+        ratio = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        att = jnp.einsum("btn,bsn,btsh->btsh", cb, bb, ratio)
+        y = y + jnp.einsum("btsh,bsh,bshp->bthp", att, dtb, xb)
+        # state: S' = exp(cum_C) S_0 + sum_s exp(cum_C - cum_s) dt_s x_s b_s^T
+        la_end = cum[:, -1]                              # [B, H]
+        k_dec = jnp.exp(la_end[:, None] - cum) * dtb     # [B, C, H]
+        st = st * jnp.exp(la_end)[..., None, None] \
+            + jnp.einsum("bch,bchp,bcn->bhpn", k_dec, xb, bb)
+        return st, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * cs, h, p)[:, :s]
+    return y.astype(x.dtype), state
+
+
+def ssd_step(x, dt, a_log, b, c, state):
+    """Single-token SSD recurrence.
+
+    x [B, H, P]; dt [B, H]; b/c [B, N]; state [B, H, P, N].
+    """
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(a_log.astype(jnp.float32))[None, :] * dtf)
+    state = state * decay[..., None, None] \
+        + jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, bf)
+    y = jnp.einsum("bhpn,bn->bhp", state, cf)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv1d. x [B, S, C]; w [K, C]; cache [B, K-1, C].
+
+    Returns (y [B, S, C], new_cache [B, K-1, C]).
+    """
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xe = jnp.concatenate([cache, x], axis=1)             # [B, S+K-1, C]
+    y = sum(xe[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+            for i in range(k))
+    y = y + b.astype(x.dtype)
+    new_cache = xe[:, -(k - 1):] if k > 1 else cache
+    return y, new_cache
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ArchConfig, state: dict,
+                 single_step: bool = False) -> tuple[jax.Array, dict]:
+    """One Mamba-2 block (pre-norm residual).
+
+    state = {"ssm": [B, H, P, N] f32, "conv": [B, K-1, C_conv]}.
+    """
+    s = cfg.ssm
+    bsz, seq, d = x.shape
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = xn @ p["in_proj"]
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * s.d_state], axis=-1)
+    xbc, conv_cache = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                  # [B, S, H]
+    xh = xs.reshape(bsz, seq, h, s.head_dim)
+
+    if single_step:
+        y, ssm = ssd_step(xh[:, 0], dt[:, 0], p["a_log"], b[:, 0], c[:, 0],
+                          state["ssm"])
+        y = y[:, None]
+    else:
+        y, ssm = ssd_chunked(xh, dt, p["a_log"], b, c, state["ssm"])
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, seq, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return x + out, {"ssm": ssm, "conv": conv_cache}
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = d_inner // s.head_dim
+    return {"ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, d_inner + 2 * s.d_state),
+                              jnp.bfloat16)}

@@ -1,0 +1,675 @@
+"""Unified CausalLM over the assigned-architecture pool.
+
+One model definition, driven entirely by ``ArchConfig``:
+
+  dense GQA transformers   stablelm-12b, glm4-9b, chatglm3-6b, qwen2-1.5b
+  audio backbone           musicgen-medium (multi-codebook in/out heads)
+  VLM backbone             qwen2-vl-7b (M-RoPE position streams)
+  MoE                      qwen3-moe-30b-a3b, deepseek-v3-671b (MLA + shared)
+  SSM                      rwkv6-3b
+  hybrid                   zamba2-7b (Mamba2 + one shared attn block)
+
+Execution structure (this is what keeps the 512-chip dry-run compilable):
+
+* layers are STACKED on a leading axis and run with ``lax.scan`` — one HLO
+  body regardless of depth (61-layer deepseek compiles as fast as 2-layer);
+* every block body is ``jax.checkpoint``-wrapped in training (remat), so
+  activation memory is O(1) in depth;
+* three modes share the code: ``train`` (no caches), ``prefill`` (emit the
+  decode state for the whole prompt), ``decode`` (single token, O(1) or
+  O(S) state per family);
+* the LM loss is CHUNKED over the sequence (``chunked_xent_loss``): logits
+  for a few hundred tokens exist at a time, rematerialized in backward —
+  full [B, S, V] logits for train_4k glm4 would be 635 GB in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv as RW
+from repro.models.layers import Params
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(cfg: ArchConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    norm = (L.init_layernorm if cfg.norm_style == "layernorm"
+            else L.init_rmsnorm)
+    return {
+        "ln1": norm(d),
+        "attn": (L.init_mla(cfg, k1) if cfg.mla else L.init_attention(cfg, k1)),
+        "ln2": norm(d),
+    }
+
+
+def _init_dense_layer(cfg: ArchConfig, key: jax.Array,
+                      d_ff: Optional[int] = None) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = _init_attn_block(cfg, k1)
+    p["mlp"] = L.init_mlp(cfg.d_model, d_ff or cfg.d_ff, cfg.mlp_style, k2)
+    return p
+
+
+def _init_moe_layer(cfg: ArchConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = _init_attn_block(cfg, k1)
+    p["moe"] = MOE.init_moe(cfg, k2)
+    return p
+
+
+def _stack_init(fn: Callable, n: int, key: jax.Array) -> Params:
+    """Initialize n layers and stack every leaf on a leading axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_model(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    norm = (L.init_layernorm if cfg.norm_style == "layernorm"
+            else L.init_rmsnorm)
+    params: Params = {"final_norm": norm(d)}
+
+    # embeddings / heads
+    if cfg.n_codebooks:
+        params["embed_codebooks"] = L._embed_init(
+            ks[0], (cfg.n_codebooks, v, d))
+        params["lm_heads"] = L._dense_init(ks[1], (cfg.n_codebooks, d, v))
+    else:
+        params["embed"] = L.init_embedding(v, d, ks[0])
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L._dense_init(ks[1], (d, v))
+
+    if cfg.family == "ssm":                       # rwkv6
+        params["layers"] = _stack_init(
+            lambda k: RW.init_rwkv_block(cfg, k), cfg.n_layers, ks[2])
+    elif cfg.family == "hybrid":                  # zamba2
+        params["mamba"] = _stack_init(
+            lambda k: M2.init_mamba2_block(cfg, k), cfg.n_layers, ks[2])
+        kk = jax.random.split(ks[3], 2)
+        shared = _init_attn_block(cfg, kk[0])
+        shared["mlp"] = L.init_mlp(d, cfg.d_ff, cfg.mlp_style, kk[1])
+        # rename for the sharding rules (unstacked weights)
+        params["shared_attn_block"] = {
+            "ln1": shared["ln1"], "shared_attn": shared["attn"],
+            "ln2": shared["ln2"], "shared_mlp": shared["mlp"]}
+    elif cfg.moe is not None:                     # deepseek-v3 / qwen3-moe
+        nd = cfg.moe.n_dense_layers
+        if nd:
+            dff = cfg.moe.d_ff_dense or cfg.d_ff
+            params["dense_layers"] = _stack_init(
+                lambda k: _init_dense_layer(cfg, k, dff), nd, ks[2])
+        params["layers"] = _stack_init(
+            lambda k: _init_moe_layer(cfg, k), cfg.n_layers - nd, ks[3])
+    else:                                         # dense / audio / vlm
+        params["layers"] = _stack_init(
+            lambda k: _init_dense_layer(cfg, k), cfg.n_layers, ks[2])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    """tokens [B, S] (or [B, S, K] multi-codebook) -> x [B, S, D]."""
+    if cfg.n_codebooks:
+        tbl = params["embed_codebooks"]               # [K, V, D]
+        x = sum(jnp.take(tbl[k], tokens[..., k], axis=0)
+                for k in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embed == "sinusoidal":
+        s = x.shape[1]
+        pos = (positions if positions is not None
+               else jnp.arange(s))                    # [S] or [B, S]
+        x = x + _sinusoidal(pos, cfg.d_model).astype(x.dtype)
+    return logical_constraint(x, "batch", "seq", None)
+
+
+def _sinusoidal(pos: jax.Array, d: int) -> jax.Array:
+    """Dynamic sinusoidal embedding for int positions [..., S] -> [..., S, D]."""
+    half = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos[..., None].astype(jnp.float32) / jnp.power(10000.0, half / d)
+    out = jnp.zeros((*pos.shape, d), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(angle))
+    out = out.at[..., 1::2].set(jnp.cos(angle))
+    return out
+
+
+def unembed_hidden(params: Params, cfg: ArchConfig, x: jax.Array
+                   ) -> jax.Array:
+    """x [B, S, D] -> logits f32 [B, S, V] (or [B, S, K, V])."""
+    xf = x.astype(jnp.float32)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", xf,
+                            params["lm_heads"].astype(jnp.float32))
+        return logical_constraint(logits, "batch", "seq", None, "tensor")
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = xf @ w.astype(jnp.float32)
+    return logical_constraint(logits, "batch", "seq", "tensor")
+
+
+# ---------------------------------------------------------------------------
+# Blocks (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _norm(p, x, cfg):
+    return L.apply_norm(p, x, cfg.norm_eps)
+
+
+def _attn(cfg):
+    return L.mla_attention if cfg.mla else L.attention
+
+
+def _attn_mlp_block(lp: Params, x, cfg, *, positions, kv=None, cache_len=None,
+                    moe_layer=False, return_kv=False):
+    """Pre-norm attn + (mlp|moe). Returns (x, aux, new_kv)."""
+    h, new_kv = _attn(cfg)(lp["attn"], _norm(lp["ln1"], x, cfg), cfg,
+                           positions=positions, kv_cache=kv,
+                           cache_len=cache_len, return_kv=return_kv)
+    x = x + h
+    x = logical_constraint(x, "batch", "seq", None)
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        y, aux = MOE.moe_mlp(lp["moe"], _norm(lp["ln2"], x, cfg), cfg)
+    else:
+        y = L.mlp(lp["mlp"], _norm(lp["ln2"], x, cfg), cfg.mlp_style)
+    x = x + y
+    x = logical_constraint(x, "batch", "seq", None)
+    return x, aux, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Forward — mode "train" | "prefill" | "decode"
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ForwardOut:
+    hidden: jax.Array               # [B, S, D] final-normed hidden states
+    aux: jax.Array                  # scalar aux loss (MoE balance)
+    state: Optional[dict]           # decode state (prefill/decode modes)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            mode: str = "train",
+            state: Optional[dict] = None,
+            remat: bool = True,
+            unroll_decode: bool = False) -> ForwardOut:
+    assert mode in ("train", "prefill", "decode")
+    b = tokens.shape[0]
+    s = tokens.shape[1]
+    cache_len = state["len"] if (mode == "decode" and state is not None
+                                 and "len" in state) else None
+
+    if positions is None:
+        if mode == "decode":
+            base = cache_len + jnp.arange(s)
+            positions = (jnp.broadcast_to(base, (3, b, s))
+                         if cfg.mrope_sections else base)
+        else:
+            positions = (jnp.broadcast_to(jnp.arange(s), (3, b, s))
+                         if cfg.mrope_sections else jnp.arange(s))
+
+    emb_pos = positions if cfg.pos_embed == "sinusoidal" else None
+    if mode == "decode" and cfg.pos_embed == "sinusoidal":
+        emb_pos = cache_len + jnp.arange(s)
+    x = embed_tokens(params, cfg, tokens, emb_pos)
+
+    ck = functools.partial(jax.checkpoint) if (remat and mode == "train") \
+        else (lambda f: f)
+
+    if cfg.family == "ssm":
+        out = _forward_rwkv(params, cfg, x, mode, state, ck)
+    elif cfg.family == "hybrid":
+        out = _forward_hybrid(params, cfg, x, positions, mode, state, ck)
+    elif mode == "decode" and unroll_decode:
+        out = _decode_transformer_unrolled(params, cfg, x, positions, state)
+    else:
+        out = _forward_transformer(params, cfg, x, positions, mode, state, ck)
+
+    x, aux, new_state = out
+    x = _norm(params["final_norm"], x, cfg)
+    if new_state is not None and cache_len is not None:
+        new_state["len"] = cache_len + s
+    return ForwardOut(x, aux, new_state)
+
+
+# -- transformer families ----------------------------------------------------
+
+
+def _kv_zeros(cfg: ArchConfig, n_layers: int, batch: int, capacity: int):
+    if cfg.mla:
+        m = cfg.mla
+        return {"latent": jnp.zeros((n_layers, batch, capacity,
+                                     m.kv_lora_rank), jnp.bfloat16),
+                "krope": jnp.zeros((n_layers, batch, capacity,
+                                    m.qk_rope_head_dim), jnp.bfloat16)}
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((n_layers, batch, capacity, hkv, dh),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_layers, batch, capacity, hkv, dh),
+                           jnp.bfloat16)}
+
+
+def _cache_of(state, i: Optional[slice] = None):
+    if "latent" in state:
+        return (state["latent"], state["krope"])
+    return (state["k"], state["v"])
+
+
+def _forward_transformer(params, cfg, x, positions, mode, state, ck):
+    b, s, d = x.shape
+    nd = cfg.moe.n_dense_layers if cfg.moe else 0
+    n_moe = cfg.n_layers - nd if cfg.moe else 0
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_stack(x, stack, moe_layer, kv_stack, cache_len, want_kv):
+        """Scan one homogeneous stack. Returns (x, aux, new_kv_stack)."""
+        if mode == "decode":
+            def body(carry, xs):
+                xc = carry
+                lp = xs[0]
+                kv = tuple(xs[1:])
+                xc, aux, new_kv = _attn_mlp_block(
+                    lp, xc, cfg, positions=positions, kv=kv,
+                    cache_len=cache_len, moe_layer=moe_layer)
+                return xc, (aux, *new_kv)
+            x, ys = jax.lax.scan(body, x, (stack, *kv_stack))
+            return x, ys[0].sum(), tuple(ys[1:])
+        if mode == "prefill":
+            def body(carry, lp):
+                xc = carry
+                xc, aux, kv = _attn_mlp_block(
+                    lp, xc, cfg, positions=positions, kv=None,
+                    cache_len=None, moe_layer=moe_layer, return_kv=True)
+                return xc, (aux, *kv)
+            x, ys = jax.lax.scan(body, x, stack)
+            return x, ys[0].sum(), tuple(ys[1:])
+
+        def body(carry, lp):
+            xc, at = carry
+            xc, aux, _ = _attn_mlp_block(
+                lp, xc, cfg, positions=positions, kv=None, cache_len=None,
+                moe_layer=moe_layer)
+            return (xc, at + aux), None
+
+        (x, at), _ = jax.lax.scan(ck(body), (x, jnp.zeros((), jnp.float32)),
+                                  stack)
+        return x, at, None
+
+    cache_len = state["len"] if mode == "decode" else None
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {}
+
+    want_kv = mode == "prefill"
+    if nd:
+        dense_kv = (_split_state(state, "dense") if mode == "decode"
+                    else (None,))
+        x, aux, new_kv = run_stack(x, params["dense_layers"], False,
+                                   dense_kv, cache_len, want_kv)
+        aux_total += aux
+        if new_state is not None and new_kv is not None:
+            _merge_state(new_state, "dense", new_kv, cfg)
+    stack = params["layers"]
+    main_kv = (_split_state(state, "main") if mode == "decode" else (None,))
+    x, aux, new_kv = run_stack(x, stack, cfg.moe is not None, main_kv,
+                               cache_len, want_kv)
+    aux_total += aux
+    if new_state is not None and new_kv is not None:
+        _merge_state(new_state, "main", new_kv, cfg)
+    return x, aux_total, new_state
+
+
+def _decode_transformer_unrolled(params, cfg, x, positions, state):
+    """Decode with a PYTHON loop over layers and PER-LAYER cache leaves
+    (state["main"]["k"] is a LIST of [B, C, Hkv, Dh] arrays).
+
+    §Perf (decode iteration 2): the scanned decode stacks every layer's
+    cache into one [L, ...] tensor and accumulates updates through
+    dynamic-update-slice on the scan outputs — buffer assignment copies
+    the full stacked cache per layer (~40x the useful traffic at glm4
+    decode_32k). Unrolled layers keep each cache an independent
+    donated buffer: traffic = one in-place token write + one read per
+    layer. Decode HLO is tiny, so 40x code duplication is cheap.
+    """
+    cache_len = state["len"]
+    nd = cfg.moe.n_dense_layers if cfg.moe else 0
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state: dict = {}
+
+    def layer_params(stack, i):
+        return jax.tree.map(lambda a: a[i], stack)
+
+    def run_part(x, stack, part, n_layers, moe_layer):
+        st = state[part]
+        keys = ("latent", "krope") if cfg.mla else ("k", "v")
+        new_kv = {k: [] for k in keys}
+        for i in range(n_layers):
+            kv = tuple(st[k][i] for k in keys)
+            lp = layer_params(stack, i)
+            x, aux, kv_out = _attn_mlp_block(
+                lp, x, cfg, positions=positions, kv=kv,
+                cache_len=cache_len, moe_layer=moe_layer)
+            for k, t in zip(keys, kv_out):
+                new_kv[k].append(t)
+        new_state[part] = new_kv
+        return x, aux
+
+    if nd:
+        x, aux = run_part(x, params["dense_layers"], "dense", nd, False)
+        aux_total += aux
+    x, aux = run_part(x, params["layers"], "main", cfg.n_layers - nd,
+                      cfg.moe is not None)
+    aux_total += aux
+    return x, aux_total, new_state
+
+
+def _split_state(state, part):
+    if "latent" in state[part]:
+        return (state[part]["latent"], state[part]["krope"])
+    return (state[part]["k"], state[part]["v"])
+
+
+def _merge_state(new_state, part, kv, cfg):
+    if cfg.mla:
+        new_state[part] = {"latent": kv[0], "krope": kv[1]}
+    else:
+        new_state[part] = {"k": kv[0], "v": kv[1]}
+
+
+# -- rwkv ---------------------------------------------------------------------
+
+
+def _forward_rwkv(params, cfg, x, mode, state, ck):
+    b = x.shape[0]
+
+    if mode == "train":
+        def body(carry, lp):
+            xc = carry
+            st = RW.init_rwkv_state(cfg, b)
+            xc, _ = RW.rwkv_block(lp, xc, cfg, st)
+            return xc, None
+        x, _ = jax.lax.scan(ck(body), x, params["layers"])
+        return x, jnp.zeros((), jnp.float32), None
+
+    if mode == "prefill":
+        def body(carry, lp):
+            xc = carry
+            st = RW.init_rwkv_state(cfg, b)
+            xc, new_st = RW.rwkv_block(lp, xc, cfg, st)
+            return xc, new_st
+        x, sts = jax.lax.scan(body, x, params["layers"])
+        return x, jnp.zeros((), jnp.float32), {"rwkv": sts}
+
+    def body(carry, xs):
+        xc = carry
+        lp, st = xs
+        xc, new_st = RW.rwkv_block(lp, xc, cfg, st, single_step=True)
+        return xc, new_st
+    x, sts = jax.lax.scan(body, x, (params["layers"], state["rwkv"]))
+    return x, jnp.zeros((), jnp.float32), {"rwkv": sts}
+
+
+# -- zamba2 hybrid -------------------------------------------------------------
+
+
+def _hybrid_layout(cfg: ArchConfig):
+    period = cfg.attn_layer_period or 6
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return period, n_groups, tail
+
+
+def _forward_hybrid(params, cfg, x, positions, mode, state, ck):
+    b = x.shape[0]
+    period, n_groups, tail = _hybrid_layout(cfg)
+    sh = params["shared_attn_block"]
+    cache_len = state["len"] if mode == "decode" else None
+    single = mode == "decode"
+
+    def group_of(tree, n=n_groups, p=period):
+        return jax.tree.map(
+            lambda a: a[:n * p].reshape(n, p, *a.shape[1:]), tree)
+
+    def tail_of(tree, n=n_groups, p=period):
+        return jax.tree.map(lambda a: a[n * p:], tree)
+
+    mg, mt = group_of(params["mamba"]), tail_of(params["mamba"])
+
+    def mamba_scan(x, stack, states):
+        """Scan mamba layers; states None (zeros) or stacked pytree."""
+        if states is None:
+            def body(xc, lp):
+                st = M2.init_mamba2_state(cfg, b)
+                xc, _ = M2.mamba2_block(lp, xc, cfg, st,
+                                        single_step=single)
+                return xc, None
+            x, _ = jax.lax.scan(body, x, stack)
+            return x, None
+        def body(xc, xs):
+            lp, st = xs
+            xc, new_st = M2.mamba2_block(lp, xc, cfg, st,
+                                         single_step=single)
+            return xc, new_st
+        return jax.lax.scan(body, x, (stack, states))
+
+    def shared_block(x, kv):
+        h, new_kv = L.attention(sh["shared_attn"],
+                                _norm(sh["ln1"], x, cfg), cfg,
+                                positions=positions, kv_cache=kv,
+                                cache_len=cache_len)
+        x = x + h
+        x = x + L.mlp(sh["shared_mlp"], _norm(sh["ln2"], x, cfg),
+                      cfg.mlp_style)
+        return logical_constraint(x, "batch", "seq", None), new_kv
+
+    if mode == "train":
+        def gbody(xc, gp):
+            xc, _ = mamba_scan(xc, gp, None)
+            xc, _ = shared_block(xc, None)
+            return xc, None
+        x, _ = jax.lax.scan(ck(gbody), x, mg)
+        if tail:
+            x, _ = mamba_scan(x, mt, None)
+        return x, jnp.zeros((), jnp.float32), None
+
+    if mode == "prefill":
+        # prefill: emit per-layer mamba states; shared-attn K/V via
+        # return-kv attention (capacity == prompt length)
+        def gbody(xc, gp):
+            def mbody(xc2, lp):
+                st = M2.init_mamba2_state(cfg, b)
+                xc2, new_st = M2.mamba2_block(lp, xc2, cfg, st)
+                return xc2, new_st
+            xc, msts = jax.lax.scan(mbody, xc, gp)
+            h, kv = L.attention(sh["shared_attn"],
+                                _norm(sh["ln1"], xc, cfg), cfg,
+                                positions=positions, return_kv=True)
+            xc = xc + h
+            xc = xc + L.mlp(sh["shared_mlp"], _norm(sh["ln2"], xc, cfg),
+                            cfg.mlp_style)
+            return xc, (msts, kv)
+        x, (g_states, kvs) = jax.lax.scan(gbody, x, mg)
+        t_states = None
+        if tail:
+            def mbody(xc2, lp):
+                st = M2.init_mamba2_state(cfg, b)
+                xc2, new_st = M2.mamba2_block(lp, xc2, cfg, st)
+                return xc2, new_st
+            x, t_states = jax.lax.scan(mbody, x, mt)
+        mamba_states = _cat_group_tail(g_states, t_states)
+        return x, jnp.zeros((), jnp.float32), {
+            "mamba": mamba_states, "k": kvs[0], "v": kvs[1]}
+
+    # decode
+    mstates = state["mamba"]
+    g_st, t_st = group_of(mstates), tail_of(mstates)
+
+    def gbody(xc, xs):
+        gp, gst, k_g, v_g = xs
+        xc, new_st = mamba_scan(xc, gp, gst)
+        xc, new_kv = shared_block(xc, (k_g, v_g))
+        return xc, (new_st, *new_kv)
+    x, ys = jax.lax.scan(gbody, x, (mg, g_st, state["k"], state["v"]))
+    new_g_states, new_k, new_v = ys
+    new_t = None
+    if tail:
+        x, new_t = mamba_scan(x, mt, t_st)
+    return x, jnp.zeros((), jnp.float32), {
+        "mamba": _cat_group_tail(new_g_states, new_t),
+        "k": new_k, "v": new_v}
+
+
+def _cat_group_tail(g_states, t_states):
+    """[NG, P, ...] grouped states (+ optional [T, ...] tail) -> [L, ...]."""
+    flat = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), g_states)
+    if t_states is None:
+        return flat
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        flat, t_states)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state allocation (for serve_step input specs)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, capacity: int,
+                      unrolled: bool = False) -> dict:
+    """Zero-initialized decode state with KV/recurrent capacity.
+
+    ``unrolled``: per-layer cache LISTS for the unrolled decode path
+    (transformer families only — see _decode_transformer_unrolled).
+    """
+    if cfg.family == "ssm":
+        hd = cfg.ssm.head_dim
+        h = cfg.d_model // hd
+        lz = cfg.n_layers
+        return {"rwkv": {
+            "tm_x": jnp.zeros((lz, batch, cfg.d_model), jnp.bfloat16),
+            "cm_x": jnp.zeros((lz, batch, cfg.d_model), jnp.bfloat16),
+            "wkv": jnp.zeros((lz, batch, h, hd, hd), jnp.float32)},
+            "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        h = d_inner // s.head_dim
+        period, n_groups, tail = _hybrid_layout(cfg)
+        hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {"mamba": {
+            "ssm": jnp.zeros((cfg.n_layers, batch, h, s.head_dim,
+                              s.d_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1,
+                               d_inner + 2 * s.d_state), jnp.bfloat16)},
+            "k": jnp.zeros((n_groups, batch, capacity, hkv, dh),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_groups, batch, capacity, hkv, dh),
+                           jnp.bfloat16),
+            "len": jnp.zeros((), jnp.int32)}
+    nd = cfg.moe.n_dense_layers if cfg.moe else 0
+    st: dict = {"len": jnp.zeros((), jnp.int32)}
+    if nd:
+        st["dense"] = _kv_zeros(cfg, nd, batch, capacity)
+    st["main"] = _kv_zeros(cfg, cfg.n_layers - nd, batch, capacity)
+    if unrolled:
+        for part in ("dense", "main"):
+            if part in st:
+                st[part] = {k: [v[i] for i in range(v.shape[0])]
+                            for k, v in st[part].items()}
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy) and public entry points
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent_loss(params: Params, cfg: ArchConfig, hidden: jax.Array,
+                      labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Next-token CE over the sequence in chunks of ``chunk`` tokens.
+
+    hidden [B, S, D]; labels [B, S] (or [B, S, K]). The per-chunk body is
+    checkpointed: only the hidden chunk is saved for backward, the [B, C, V]
+    logits are rematerialized — peak logits memory is B*C*V, not B*S*V.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk, *labels.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h, lab = inp
+        logits = unembed_hidden(params, cfg, h)       # f32 [B, C, (K,) V]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / labels.size
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: dict, *,
+            remat: bool = True, loss_chunk: int = 512) -> tuple:
+    """batch: {"tokens", "labels", optional "positions"} -> (loss, metrics)."""
+    out = forward(params, cfg, batch["tokens"],
+                  positions=batch.get("positions"), mode="train",
+                  remat=remat)
+    ce = chunked_xent_loss(params, cfg, out.hidden, batch["labels"],
+                           chunk=loss_chunk)
+    loss = ce + out.aux
+    return loss, {"ce": ce, "aux": out.aux}
+
+
+def full_logits(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+                positions: Optional[jax.Array] = None,
+                remat: bool = False) -> tuple:
+    """Small-scale helper (smoke tests): full [B, S, V] logits."""
+    out = forward(params, cfg, tokens, positions=positions, mode="train",
+                  remat=remat)
+    return unembed_hidden(params, cfg, out.hidden), out.aux
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                state: dict, *, positions=None,
+                unroll: bool = False) -> tuple:
+    """One decode step. tokens [B, 1] (or [B, 1, K]) -> (logits, state)."""
+    out = forward(params, cfg, tokens, positions=positions, mode="decode",
+                  state=state, unroll_decode=unroll)
+    return unembed_hidden(params, cfg, out.hidden), out.state
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+            positions=None) -> tuple:
+    """Prompt pass: returns (last-position logits, decode state)."""
+    out = forward(params, cfg, tokens, positions=positions, mode="prefill")
+    logits = unembed_hidden(params, cfg, out.hidden[:, -1:])
+    st = out.state
+    if st is not None:
+        st["len"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, st

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer in the SupraSNN vocabulary (DESIGN.md §4).
+
+The structural mapping to the paper:
+
+* the router's top-k ``dispatch`` tensor IS the MC-tree routing bitstring —
+  one bit per (token, expert, slot) saying "this expert holds work for this
+  token"; tokens are multicast only to the experts that need them
+  (capacity-bounded all_to_all over the EP axis);
+* the weighted ``combine`` of expert outputs IS the ME tree — a
+  deterministic, fixed-order merge of partial results into the token's
+  residual stream (an einsum reduction, bit-identical run to run);
+* expert placement under the per-device HBM budget is the same
+  parallelism-memory trade-off the paper's partitioner solves (Eq. 9):
+  experts-per-device = n_experts / ep_size is our |P_i| analogue.
+
+Implementation is GShard-style dense dispatch (einsum with a one-hot
+dispatch tensor) — the idiomatic TPU formulation: no gather/scatter,
+MXU-friendly, and the dispatch/combine einsums shard cleanly over
+('data', groups) x ('model', experts).
+
+SCALING NOTE: dispatch is computed PER GROUP of ``group_size`` tokens, so
+the one-hot tensors are [G, T_g, E, C_g] with T_g ~ 2k, never the flat
+[T, E, C] (at train_4k deepseek-v3 scale the flat tensor would hold 1e16
+elements). Groups are an integer multiple of the data-shard count so a
+group never crosses devices; capacity is enforced per (group, expert) —
+this matches GShard/Switch semantics where capacity is local to a group.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import Params, _dense_init
+
+
+def init_moe(cfg: ArchConfig, key: jax.Array) -> Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, mo.n_experts), dtype=jnp.float32),
+        # stacked expert weights [E, d, d_ff] — shard E over 'model' (EP)
+        "w_gate": _dense_init(ks[1], (mo.n_experts, d, mo.d_ff_expert)),
+        "w_up": _dense_init(ks[2], (mo.n_experts, d, mo.d_ff_expert)),
+        "w_down": _dense_init(ks[3], (mo.n_experts, mo.d_ff_expert, d)),
+    }
+    if mo.n_shared_experts:
+        kss = jax.random.split(ks[4], 3)
+        dff_sh = mo.d_ff_shared * mo.n_shared_experts
+        p["shared"] = {"w_gate": _dense_init(kss[0], (d, dff_sh)),
+                       "w_up": _dense_init(kss[1], (d, dff_sh)),
+                       "w_down": _dense_init(kss[2], (dff_sh, d))}
+    return p
+
+
+def route_topk(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k routing with normalized probabilities.
+
+    logits [..., E] f32 -> (weights [..., k], indices [..., k]).
+    DeepSeek-V3 style: softmax over the selected k (sigmoid variant omitted;
+    the communication pattern — the part that matters for the systems
+    reproduction — is identical).
+    """
+    vals, idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(vals, axis=-1)
+    return weights, idx
+
+
+def _pick_group_size(t: int, target: int = 2048) -> int:
+    """Largest divisor of t that is <= target (>= 1)."""
+    g = min(target, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_mlp(p: Params, x: jax.Array, cfg: ArchConfig, *,
+            group_size: Optional[int] = None) -> tuple[jax.Array, jax.Array]:
+    """MoE MLP. x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Grouped dense-dispatch formulation (per group g of T_g tokens):
+      dispatch [G, T_g, E, C] one-hot  (MC tree: token -> expert-slot multicast)
+      expert compute [G, E, C, D]      (the parallel SPU array)
+      combine  [G, T_g, E, C] weighted (ME tree: deterministic partial-sum merge)
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    tg = group_size or _pick_group_size(t)
+    g = t // tg
+    xt = x.reshape(g, tg, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = route_topk(logits, mo.top_k)           # [G, T_g, k]
+
+    # load-balancing aux loss (GShard/Switch): E * sum_e f_e * P_e
+    one_hot = jax.nn.one_hot(idx, mo.n_experts, dtype=jnp.float32)
+    f = one_hot.sum(axis=2).mean(axis=(0, 1))             # fraction per expert
+    aux = mo.n_experts * jnp.sum(f * probs.mean(axis=(0, 1))) \
+        * mo.router_aux_coef
+
+    capacity = int(mo.capacity_factor * tg * mo.top_k / mo.n_experts)
+    capacity = max(capacity, 4)
+
+    # position of each (token, k) within its expert's per-group capacity
+    flat_expert = idx.reshape(g, tg * mo.top_k)           # [G, T_g*k]
+    flat_onehot = jax.nn.one_hot(flat_expert, mo.n_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(flat_onehot, axis=1) - 1)           # [G, T_g*k, E]
+    pos = jnp.take_along_axis(pos, flat_expert[..., None],
+                              axis=2)[..., 0].reshape(g, tg, mo.top_k)
+    keep = pos < capacity                                 # overflow -> dropped
+    pos_c = jnp.where(keep, pos, 0)
+
+    expert_oh = jax.nn.one_hot(idx, mo.n_experts, dtype=jnp.bfloat16)
+    slot_oh = jax.nn.one_hot(pos_c, capacity, dtype=jnp.bfloat16) \
+        * keep[..., None].astype(jnp.bfloat16)
+    # dispatch [G, T_g, E, C]: sum over the k selections
+    disp = jnp.einsum("gtke,gtkc->gtec", expert_oh, slot_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", expert_oh.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32),
+                      jnp.where(keep, weights, 0.0))
+
+    # MC-tree multicast: gather token activations into expert buffers
+    buf = jnp.einsum("gtd,gtec->gecd", xt, disp.astype(x.dtype))
+    # parallel expert compute (the SPU array)
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])  # [G, E, C, D]
+    # ME-tree merge: deterministic weighted combine back to tokens
+    yt = jnp.einsum("gecd,gtec->gtd", out.astype(jnp.float32), comb)
+
+    y = yt.astype(x.dtype)
+    if mo.n_shared_experts:
+        sh = p["shared"]
+        xf = xt
+        y = y + ((jax.nn.silu(xf @ sh["w_gate"]) * (xf @ sh["w_up"]))
+                 @ sh["w_down"])
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,254 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — data-dependent decay linear
+attention, the [ssm]-family member of the assigned pool.
+
+SupraSNN mapping (DESIGN.md §4): the wide r/k/v/g projections are the
+"synaptic" half (massive cheap matmuls, sharded over 'model'); the WKV
+state recurrence is the "neuronal" half — a small stateful update per head,
+exactly the paper's compute asymmetry. The chunked formulation below keeps
+the synaptic half on the MXU and the state hop at O(S/C) sequential steps.
+
+Two execution paths:
+
+* ``wkv6_chunked``: parallel within chunks of C tokens (einsum form, causal
+  decay ratios computed in log space), ``lax.scan`` across chunks carrying
+  the [H, N, N] state — used for train/prefill;
+* ``wkv6_step``: the exact recurrence for single-token decode (O(1) state,
+  enabling the long_500k cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_block(cfg: ArchConfig, key: jax.Array) -> Params:
+    d = cfg.d_model
+    s = cfg.ssm
+    lora = s.decay_lora
+    ks = jax.random.split(key, 16)
+    n_heads = d // s.head_dim
+    return {
+        "time_mix": {
+            # base lerp coefficients for the 5 ddlerp streams (w,k,v,r,g)
+            "mu_base": jnp.zeros((d,), jnp.float32),
+            "mu": jnp.zeros((5, d), jnp.float32),
+            # ddlerp LoRA: tanh(x W1) W2 per stream
+            "lora_w1": _dense_init(ks[0], (d, 5 * 32), dtype=jnp.float32),
+            "lora_w2": _dense_init(ks[1], (5, 32, d), dtype=jnp.float32),
+            # data-dependent decay LoRA
+            "w0": jnp.full((d,), -6.0, jnp.float32),   # exp(-exp(-6)) ~ .9975
+            "w1": _dense_init(ks[2], (d, lora), dtype=jnp.float32),
+            "w2": _dense_init(ks[3], (lora, d), dtype=jnp.float32),
+            "wr": _dense_init(ks[4], (d, d)),
+            "wk": _dense_init(ks[5], (d, d)),
+            "wv": _dense_init(ks[6], (d, d)),
+            "wg": _dense_init(ks[7], (d, d)),
+            "u": (jax.random.normal(ks[8], (n_heads, s.head_dim),
+                                    jnp.float32) * 0.1),
+            "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                     "bias": jnp.zeros((d,), jnp.float32)},
+            "wo": _dense_init(ks[9], (d, d)),
+        },
+        "channel_mix": {
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": _dense_init(ks[10], (d, cfg.d_ff)),
+            "wv": _dense_init(ks[11], (cfg.d_ff, d)),
+            "wr": _dense_init(ks[12], (d, d)),
+        },
+        "ln1": init_rmsnorm(d),
+        "ln2": init_rmsnorm(d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV-6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(r, k, v, w_log, u, state, chunk: int | None = None):
+    """Chunked WKV-6.
+
+    r/k/v [B, S, H, N]; w_log [B, S, H, N] = log(decay) <= 0;
+    u [H, N] bonus; state [B, H, N, N] (key-major: S[k_dim, v_dim]).
+    Returns (y [B, S, H, N], state').
+
+    Per head: S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+              y_t = S_{t-1}^T r_t + (r_t . (u*k_t)) v_t.
+
+    ``chunk`` (default env REPRO_WKV_CHUNK or 64) trades the O(S*C*H*N)
+    intra-chunk ratio-tensor HBM traffic against O(S/C * H * N^2) state
+    hops — the §Perf tuning knob for the rwkv6 train cells. On real TPU
+    the Pallas kernel (kernels/wkv6.py) replaces this path entirely.
+    """
+    import os
+    if chunk is None:
+        chunk = int(os.environ.get("REPRO_WKV_CHUNK", "64"))
+    b, s, h, n = r.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    c = chunk
+
+    def split(x):  # [B, S, H, N] -> [NC, B, C, H, N]
+        return x.reshape(b, nc, c, h, n).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = split(r), split(k), split(v), split(w_log)
+
+    import os
+    ratio_bf16 = bool(int(os.environ.get("REPRO_WKV_BF16", "0")))
+
+    def body(st, inp):
+        rb, kb, vb, wb = [x.astype(jnp.float32) for x in inp]  # [B,C,H,N]
+        la = jnp.cumsum(wb, axis=1)                 # logA_t (inclusive)
+        la_prev = la - wb                           # logA_{t-1} (exclusive)
+        # inter-chunk: y_t += (r_t * A_{t-1})^T S_0
+        q_dec = rb * jnp.exp(la_prev)
+        y = jnp.einsum("bchk,bhkn->bchn", q_dec, st)
+        # intra-chunk, strictly causal: ratio A_{t-1}/A_s, s < t, computed
+        # in log space (diff <= 0 under the mask -> exp never overflows).
+        # REPRO_WKV_BF16=1 stores the O(C^2 H N) ratio tensor in bf16
+        # (f32 accumulation) — §Perf rwkv iteration 3: the ratio tensor is
+        # the dominant HBM traffic of this formulation; decays in [0, 1]
+        # lose ~3 significand bits, the same trade flash-attention makes.
+        diff = la_prev[:, :, None] - la[:, None, :]   # [B, T, S, H, N]
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        ratio = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -1e30))
+        if ratio_bf16:
+            att = jnp.einsum("bthk,bshk,btshk->bths",
+                             rb.astype(jnp.bfloat16),
+                             kb.astype(jnp.bfloat16),
+                             ratio.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+        else:
+            att = jnp.einsum("bthk,bshk,btshk->bths", rb, kb, ratio)
+        y = y + jnp.einsum("bths,bshn->bthn", att, vb)
+        # current-token bonus: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rb, u.astype(jnp.float32), kb)
+        y = y + bonus[..., None] * vb
+        # state update: S' = diag(A_C) S_0 + sum_s diag(A_C/A_s) k_s v_s^T
+        la_end = la[:, -1][:, None]                  # [B, 1, H, N]
+        k_dec = kb * jnp.exp(la_end - la)
+        st = st * jnp.exp(la_end[:, 0])[..., None] \
+            + jnp.einsum("bshk,bshn->bhkn", k_dec, vb)
+        return st, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, n)[:, :s]
+    return y.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, w_log, u, state):
+    """Single-token recurrence. r/k/v/w_log [B, H, N]; state [B, H, N, N]."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    y = jnp.einsum("bhk,bhkn->bhn", rf, state) \
+        + jnp.einsum("bhk,hk,bhk->bh", rf, u.astype(jnp.float32),
+                     kf)[..., None] * vf
+    state = state * jnp.exp(w_log.astype(jnp.float32))[..., None] \
+        + jnp.einsum("bhk,bhn->bhkn", kf, vf)
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift (5 streams: w, k, v, r, g)."""
+    delta = x_prev - x
+    base = x + delta * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base.astype(jnp.float32) @ p["lora_w1"])
+    lora = lora.reshape(*base.shape[:-1], 5, 32)
+    mix = p["mu"] + jnp.einsum("...fk,fkd->...fd", lora, p["lora_w2"])
+    return x[..., None, :] + delta[..., None, :] * mix.astype(x.dtype)
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  x_prev: jax.Array, state: jax.Array,
+                  single_step: bool = False):
+    """x [B, S, D] (train/prefill) or [B, 1, D] (decode).
+
+    x_prev [B, D]: last token of the previous call (token shift across
+    boundaries); state [B, H, N, N].
+    """
+    b, s, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+
+    shifted = jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]],
+                              axis=1)
+    streams = _ddlerp(p, x, shifted)                  # [B, S, 5, D]
+    xw, xk, xv, xr, xg = [streams[:, :, i] for i in range(5)]
+
+    w_log = -jnp.exp(p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["w1"])
+                     @ p["w2"])                        # [B, S, D], <= 0
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = w_log.reshape(b, s, h, hd)
+
+    if single_step:
+        y, state = wkv6_step(r[:, 0], k[:, 0], v[:, 0], w_log[:, 0],
+                             p["u"], state)
+        y = y[:, None]
+    else:
+        y, state = wkv6_chunked(r, k, v, w_log, p["u"], state)
+
+    # per-head groupnorm (ln_x) then gate
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(b, s, d) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    out = (yf.astype(x.dtype) * g) @ p["wo"]
+    return out, x[:, -1], state
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, x_prev: jax.Array):
+    shifted = jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]],
+                              axis=1)
+    xk = x + (shifted - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (shifted - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1]
+
+
+def rwkv_block(p: Params, x: jax.Array, cfg: ArchConfig, state: dict,
+               single_step: bool = False) -> tuple[jax.Array, dict]:
+    """One RWKV-6 block. state = {tm_x, cm_x [B,D], wkv [B,H,N,N]}."""
+    a, tm_x, wkv = rwkv_time_mix(
+        p["time_mix"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        x_prev=state["tm_x"], state=state["wkv"], single_step=single_step)
+    x = x + a
+    c, cm_x = rwkv_channel_mix(
+        p["channel_mix"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+        x_prev=state["cm_x"])
+    x = x + c
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int,
+                    dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    return {"tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)}

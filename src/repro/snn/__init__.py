@@ -1,0 +1,10 @@
+from repro.snn.lif import (LIFParams, LIFIntParams, lif_step, lif_step_int,
+                           alpha_to_shift, spike_fn)
+from repro.snn.models import (SNNConfig, MNIST_CONFIG, SHD_CONFIG,
+                              init_params, masked_weights, forward)
+from repro.snn.quantize import QuantConfig, QuantizedSNN, quantize
+
+__all__ = ["LIFParams", "LIFIntParams", "lif_step", "lif_step_int",
+           "alpha_to_shift", "spike_fn", "SNNConfig", "MNIST_CONFIG",
+           "SHD_CONFIG", "init_params", "masked_weights", "forward",
+           "QuantConfig", "QuantizedSNN", "quantize"]

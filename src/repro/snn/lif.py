@@ -1,0 +1,103 @@
+"""Discrete-time LIF neuron dynamics (paper Eqs. (2)-(5)) with surrogate gradients.
+
+The float path is used for BPTT training (snnTorch-equivalent); the integer
+path (`lif_step_int`) is the bit-exact oracle the SupraSNN engine must match
+(deterministic-commit property).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LIFParams(NamedTuple):
+    """Neuron-model constants (paper Table 2)."""
+    alpha: float = 0.25        # leak factor; (1 - alpha) V + I
+    v_threshold: float = 1.0
+    v_reset: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient spike functions (paper Table 2: ReLU for MNIST, Sigmoid
+# for SHD).  Forward is the hard Heaviside of Eq. (4); backward replaces the
+# Dirac delta with a smooth/piecewise surrogate.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike_fn(v_minus_th: jax.Array, surrogate: str = "relu") -> jax.Array:
+    return (v_minus_th >= 0.0).astype(v_minus_th.dtype)
+
+
+def _spike_fwd(v_minus_th, surrogate):
+    return spike_fn(v_minus_th, surrogate), v_minus_th
+
+
+def _spike_bwd(surrogate, v_minus_th, g):
+    if surrogate == "relu":
+        # Triangle ("ReLU of 1-|x|") surrogate.
+        surr = jnp.maximum(0.0, 1.0 - jnp.abs(v_minus_th))
+    elif surrogate == "sigmoid":
+        k = 4.0
+        s = jax.nn.sigmoid(k * v_minus_th)
+        surr = k * s * (1.0 - s)
+    elif surrogate == "fast_sigmoid":
+        k = 10.0
+        surr = 1.0 / (1.0 + k * jnp.abs(v_minus_th)) ** 2
+    else:  # pragma: no cover - guarded by config validation
+        raise ValueError(f"unknown surrogate {surrogate!r}")
+    return (g * surr,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(v: jax.Array, current: jax.Array, p: LIFParams,
+             surrogate: str = "relu") -> tuple[jax.Array, jax.Array]:
+    """One LIF timestep. Returns (v_next, spikes).
+
+    Eq. (2): V_upd = (1 - alpha) V + I
+    Eq. (4): S = [V_upd >= V_th]
+    Eq. (5): V_next = V_reset if S else V_upd
+    """
+    v_upd = (1.0 - p.alpha) * v + current
+    s = spike_fn(v_upd - p.v_threshold, surrogate)
+    v_next = jnp.where(s > 0, p.v_reset, v_upd)
+    return v_next, s
+
+
+# ---------------------------------------------------------------------------
+# Integer (quantized-hardware) oracle. SupraSNN implements the leak with a
+# programmable right shift: (1 - alpha) V  ==  V - (V >> shift).
+# All arithmetic is int32; this is the reference the cycle engine and the
+# mapped executor must reproduce BIT-EXACTLY.
+# ---------------------------------------------------------------------------
+
+class LIFIntParams(NamedTuple):
+    leak_shift: int            # alpha approximated as 2**-leak_shift
+    v_threshold: int
+    v_reset: int
+
+
+def leak_int(v: np.ndarray | jax.Array, shift: int):
+    """V - (V >> shift), arithmetic shift (matches RTL two's-complement)."""
+    if isinstance(v, np.ndarray):
+        return v - (v >> shift)
+    return v - jax.lax.shift_right_arithmetic(v, jnp.int32(shift))
+
+
+def lif_step_int(v, current, p: LIFIntParams):
+    """Integer LIF step. Works for both numpy and jnp int32 arrays."""
+    xp = np if isinstance(v, np.ndarray) else jnp
+    v_upd = leak_int(v, p.leak_shift) + current
+    s = (v_upd >= p.v_threshold)
+    v_next = xp.where(s, xp.asarray(p.v_reset, dtype=v_upd.dtype), v_upd)
+    return v_next, s.astype(xp.int32)
+
+
+def alpha_to_shift(alpha: float) -> int:
+    """Nearest power-of-two approximation of the leak factor (paper §5)."""
+    return int(round(-np.log2(alpha)))

@@ -1,0 +1,112 @@
+"""SNN model definitions: SFNN (feedforward) and SRNN (recurrent), with
+unstructured-sparsity masks (paper §2, Fig. 2; Table 2 architectures).
+
+Parameters are plain pytrees; forward passes run the whole spike train with
+``lax.scan`` over time (BPTT unrolls through it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.snn.lif import LIFParams, lif_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    layer_sizes: tuple[int, ...] = (784, 116, 10)   # MNIST config, Table 2
+    recurrent: bool = False                          # SRNN: hidden layers recur
+    sparsity: float = 0.5189                         # fraction of PRUNED synapses
+    lif: LIFParams = LIFParams()
+    surrogate: str = "relu"
+    timesteps: int = 10
+    # SupraSNN hardware semantics: spikes generated at t-1 are distributed at
+    # t (paper §4.2), i.e. one-timestep delay on every internal synapse.
+    # External input spikes at t reach first-layer currents at t.
+    delayed: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_sizes) - 1
+
+
+def init_params(cfg: SNNConfig, key: jax.Array) -> dict[str, Any]:
+    """Init weights + fixed binary sparsity masks (pruned BEFORE training)."""
+    params: dict[str, Any] = {}
+    keys = jax.random.split(key, 2 * cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        fan_in, fan_out = cfg.layer_sizes[i], cfg.layer_sizes[i + 1]
+        w = jax.random.normal(keys[2 * i], (fan_in, fan_out)) / np.sqrt(fan_in)
+        mask = (jax.random.uniform(keys[2 * i + 1], (fan_in, fan_out))
+                >= cfg.sparsity).astype(jnp.float32)
+        params[f"w{i}"] = w * 3.0  # scale up: sparse fan-in needs larger drive
+        params[f"mask{i}"] = mask
+        if cfg.recurrent and i < cfg.n_layers - 1:
+            kr = jax.random.fold_in(keys[-1], i)
+            wr = jax.random.normal(kr, (fan_out, fan_out)) / np.sqrt(fan_out)
+            mr = (jax.random.uniform(jax.random.fold_in(kr, 1),
+                                     (fan_out, fan_out)) >= cfg.sparsity)
+            # no self-loops
+            mr = mr & ~jnp.eye(fan_out, dtype=bool)
+            params[f"wr{i}"] = wr
+            params[f"maskr{i}"] = mr.astype(jnp.float32)
+    return params
+
+
+def masked_weights(params: dict[str, Any], cfg: SNNConfig) -> dict[str, jax.Array]:
+    """Effective (pruned) weights; zero-weight synapses simply don't exist."""
+    out = {}
+    for i in range(cfg.n_layers):
+        out[f"w{i}"] = params[f"w{i}"] * params[f"mask{i}"]
+        if cfg.recurrent and i < cfg.n_layers - 1:
+            out[f"wr{i}"] = params[f"wr{i}"] * params[f"maskr{i}"]
+    return out
+
+
+def forward(params: dict[str, Any], spikes_in: jax.Array, cfg: SNNConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """Run the network over a spike train.
+
+    spikes_in: [T, B, n_in] binary.
+    Returns (spike_counts [B, n_out], out_spikes [T, B, n_out]).
+    Classification = argmax of accumulated output spikes (paper §7.1).
+    """
+    w = masked_weights(params, cfg)
+    B = spikes_in.shape[1]
+
+    v0 = [jnp.zeros((B, n)) for n in cfg.layer_sizes[1:]]
+    s0 = [jnp.zeros((B, n)) for n in cfg.layer_sizes[1:]]  # prev-step spikes
+
+    def step(carry, s_in):
+        vs, prev = carry
+        new_vs, new_spikes = [], []
+        layer_in = s_in
+        for i in range(cfg.n_layers):
+            # delayed (hardware) semantics: internal synapses carry spikes
+            # from the PREVIOUS timestep; external inputs arrive same-step.
+            src = layer_in if i == 0 else (prev[i - 1] if cfg.delayed
+                                           else layer_in)
+            cur = src @ w[f"w{i}"]
+            if cfg.recurrent and i < cfg.n_layers - 1:
+                cur = cur + prev[i] @ w[f"wr{i}"]
+            v_next, s = lif_step(vs[i], cur, cfg.lif, cfg.surrogate)
+            new_vs.append(v_next)
+            new_spikes.append(s)
+            layer_in = s
+        return (new_vs, new_spikes), new_spikes[-1]
+
+    (_, _), out_spikes = jax.lax.scan(step, (v0, s0), spikes_in)
+    return out_spikes.sum(axis=0), out_spikes
+
+
+MNIST_CONFIG = SNNConfig(layer_sizes=(784, 116, 10), recurrent=False,
+                         sparsity=0.5189, lif=LIFParams(alpha=0.25),
+                         surrogate="relu", timesteps=10)
+
+SHD_CONFIG = SNNConfig(layer_sizes=(700, 300, 20), recurrent=True,
+                       sparsity=0.8704, lif=LIFParams(alpha=0.03125),
+                       surrogate="sigmoid", timesteps=100)

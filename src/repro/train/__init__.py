@@ -1,0 +1,5 @@
+from repro.train.steps import (make_train_step, make_serve_step,
+                               make_prefill_step, TrainHParams)
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step",
+           "TrainHParams"]

@@ -1,0 +1,140 @@
+"""train_step / prefill_step / serve_step builders.
+
+The returned functions are pure (jit/pjit-able); the logical->physical
+sharding binding (``mesh_rules``) is entered INSIDE the function body, so
+it is active while jit traces — every ``logical_constraint`` in the model
+resolves against the strategy chosen by the launcher.
+
+train_step structure:
+
+    for each microbatch (lax.scan when n_micro > 1):
+        loss, grads += value_and_grad(loss_fn)          # remat'd forward
+    grads /= n_micro
+    [optional cross-pod int8 compression hook]
+    params, opt = adam_update(...)
+
+Microbatching is the compute/comm-overlap lever: XLA's latency-hiding
+scheduler overlaps the per-microbatch reduce-scatter with the next
+microbatch's backward pass, and the activation working set shrinks by
+n_micro (napkin math per arch in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import MeshRules, mesh_rules
+from repro.models import model as M
+from repro.optimizer.adam import AdamConfig, adam_init, adam_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    weight_decay: float = 0.0
+    n_micro: int = 1                  # gradient-accumulation microbatches
+    accum_dtype: Any = jnp.float32    # grad accumulator dtype
+    quantized_opt_state: bool = False # int8 Adam m/v (deepseek-v3 scale)
+    remat: bool = True
+    loss_chunk: int = 512             # chunked-xent sequence chunk
+
+
+def _adam_cfg(hp: TrainHParams) -> AdamConfig:
+    return AdamConfig(lr=hp.lr, weight_decay=hp.weight_decay,
+                      quantized_state=hp.quantized_opt_state)
+
+
+def init_opt_state(params, hp: TrainHParams):
+    return adam_init(params, _adam_cfg(hp))
+
+
+def make_train_step(cfg: ArchConfig, rules: Optional[MeshRules],
+                    hp: TrainHParams):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch``: {"tokens", "labels", optional "positions"} with a leading
+    global-batch dim divisible by hp.n_micro.
+    """
+    opt_cfg = _adam_cfg(hp)
+
+    def loss(params, mb):
+        l, metrics = M.loss_fn(params, cfg, mb, remat=hp.remat,
+                               loss_chunk=hp.loss_chunk)
+        return l, metrics
+
+    def train_step(params, opt_state, batch):
+        with mesh_rules(rules):
+            if hp.n_micro == 1:
+                (l, metrics), grads = jax.value_and_grad(
+                    loss, has_aux=True)(params, batch)
+            else:
+                def split(x):
+                    # positions [3, B, S] carry batch on dim 1
+                    if x.ndim >= 2 and x.shape[0] == 3 and \
+                            x.shape[1] % hp.n_micro == 0 and \
+                            x.shape[0] != x.shape[1]:
+                        return x.reshape(3, hp.n_micro, -1, *x.shape[2:]) \
+                                .swapaxes(0, 1)
+                    return x.reshape(hp.n_micro, -1, *x.shape[1:])
+                micro = jax.tree.map(split, batch)
+
+                def body(carry, mb):
+                    acc, ltot = carry
+                    (l, metrics), g = jax.value_and_grad(
+                        loss, has_aux=True)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, b: a + b.astype(hp.accum_dtype), acc, g)
+                    return (acc, ltot + l), metrics
+
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, hp.accum_dtype), params)
+                (grads, ltot), metrics = jax.lax.scan(
+                    body, (acc0, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / hp.n_micro, grads)
+                l = ltot / hp.n_micro
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+            params, opt_state = adam_update(grads, opt_state, params,
+                                            opt_cfg)
+        return params, opt_state, {"loss": l, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules: Optional[MeshRules]):
+    """prefill_step(params, batch) -> (last-token logits, decode state)."""
+    def prefill_step(params, batch):
+        with mesh_rules(rules):
+            logits, state = M.prefill(params, cfg, batch["tokens"],
+                                      positions=batch.get("positions"))
+        return logits, state
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, rules: Optional[MeshRules],
+                    unroll: bool = False):
+    """serve_step(params, tokens, state) -> (next_token ids, new state).
+
+    One decode step for the whole request batch: greedy next token. The
+    state argument should be DONATED by the caller's jit so KV caches
+    update in place. ``unroll``: unrolled-layer decode with per-layer
+    cache leaves (§Perf decode iteration 2).
+    """
+    def serve_step(params, tokens, state):
+        with mesh_rules(rules):
+            positions = None
+            if cfg.mrope_sections:
+                b, s = tokens.shape[:2]
+                positions = jnp.broadcast_to(
+                    state["len"] + jnp.arange(s), (3, b, s))
+            logits, new_state = M.decode_step(params, cfg, tokens, state,
+                                              positions=positions,
+                                              unroll=unroll)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok.astype(jnp.int32), new_state
+    return serve_step

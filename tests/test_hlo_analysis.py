@@ -1,0 +1,65 @@
+"""The dry-run's HLO cost instrument: trip-count-aware flops/bytes/
+collective accounting (launch/hlo_analysis.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _flops(fn, *specs):
+    return analyze(jax.jit(fn).lower(*specs).compile().as_text())["flops"]
+
+
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+MM = 2 * 256 ** 3
+
+
+def test_single_dot():
+    got = _flops(lambda w, x: x @ w, W, X)
+    assert abs(got - MM) < 0.01 * MM
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(w, x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=9)
+        return y
+    got = _flops(f, W, X)
+    assert abs(got - 9 * MM) < 0.01 * 9 * MM
+
+
+def test_nested_scan():
+    def f(w, x):
+        def outer(c, _):
+            c, _ = jax.lax.scan(lambda c2, _: (c2 @ w, None), c, None,
+                                length=4)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+    got = _flops(f, W, X)
+    assert abs(got - 12 * MM) < 0.01 * 12 * MM
+
+
+def test_backward_flops_exceed_forward():
+    """grad(loss) carries the ~3x fwd+bwd dot flops (NOTE: naive remat
+    recompute at this scale is CSE'd away by XLA — which is why the
+    analyzer must be run on the post-optimization module, not on jaxprs)."""
+    def plain_loss(w, x):
+        return ((jnp.tanh(x @ w) @ w) ** 2).sum()
+    fwd = _flops(plain_loss, W, X)
+    # grad wrt x only: fwd (2 dots) + 2 transpose-product dots = 2x fwd
+    bwd = _flops(lambda w, x: jax.grad(plain_loss, argnums=1)(w, x), W, X)
+    assert bwd >= 1.9 * fwd
+
+
+def test_bytes_scale_with_trip_count():
+    def f(w, x):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
+                            length=7)
+        return y
+    a1 = analyze(jax.jit(lambda w, x: jnp.tanh(x @ w)).lower(W, X)
+                 .compile().as_text())
+    a7 = analyze(jax.jit(f).lower(W, X).compile().as_text())
+    assert a7["bytes"] > 4 * a1["bytes"]

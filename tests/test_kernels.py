@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracle (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (lif_update, lif_update_ref, spike_accum,
+                           spike_accum_ref)
+
+
+SHAPES = [(1, 7, 5), (3, 128, 128), (5, 300, 70), (8, 513, 257),
+          (16, 1024, 116), (2, 784, 116)]
+
+
+@pytest.mark.parametrize("b,n_pre,n_post", SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int32"])
+def test_spike_accum_matches_ref(b, n_pre, n_post, dtype):
+    key = jax.random.PRNGKey(b * 1000 + n_pre)
+    k1, k2 = jax.random.split(key)
+    spikes = (jax.random.uniform(k1, (b, n_pre)) < 0.25)
+    if dtype == "int32":
+        s = spikes.astype(jnp.int32)
+        w = jax.random.randint(k2, (n_pre, n_post), -7, 8, jnp.int32)
+    else:
+        s = spikes.astype(dtype)
+        w = jax.random.normal(k2, (n_pre, n_post), jnp.float32).astype(dtype)
+    out = spike_accum(s, w, interpret=True)
+    ref = spike_accum_ref(s, w)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    if dtype == "int32":
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2 if dtype == "bfloat16" else 1e-5,
+                                   atol=1e-2 if dtype == "bfloat16" else 1e-5)
+
+
+@pytest.mark.parametrize("block", [(8, 128), (16, 256)])
+def test_spike_accum_block_shapes(block):
+    """Block-shape sweep: results must be block-size independent."""
+    key = jax.random.PRNGKey(0)
+    s = (jax.random.uniform(key, (9, 391)) < 0.3).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (391, 203))
+    out = spike_accum(s, w, block_b=block[0], block_pre=block[1],
+                      block_post=block[1], interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(spike_accum_ref(s, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spike_accum_zero_tile_skip_correct():
+    """All-zero pre-tiles must contribute exactly nothing (the MC-tree
+    block-skip cannot change results)."""
+    s = jnp.zeros((8, 512), jnp.float32)
+    s = s.at[0, 300].set(1.0)          # single live tile
+    w = jax.random.normal(jax.random.PRNGKey(2), (512, 128))
+    out = spike_accum(s, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(w[300]),
+                               rtol=1e-6)
+    assert float(jnp.abs(out[1:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("shape", [(7,), (1, 5), (3, 200), (8, 1024),
+                                   (13, 300)])
+@pytest.mark.parametrize("alpha", [0.25, 0.03125, 0.5])
+def test_lif_update_matches_ref(shape, alpha):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(17))
+    v = jax.random.normal(k1, shape)
+    cur = jax.random.normal(k2, shape) * 2.0
+    v_out, s_out = lif_update(v, cur, alpha=alpha, v_th=1.0, v_reset=0.0,
+                              interpret=True)
+    v_ref, s_ref = lif_update_ref(v, cur, alpha, 1.0, 0.0)
+    np.testing.assert_allclose(np.asarray(v_out), np.asarray(v_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s_ref))
+
+
+def test_lif_update_reset_semantics():
+    v = jnp.array([[0.5, 2.0, -1.0, 0.999]])
+    cur = jnp.zeros_like(v)
+    v_out, s_out = lif_update(v, cur, alpha=0.0, v_th=1.0, v_reset=-0.25,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(v_out[0]),
+                               [0.5, -0.25, -1.0, 0.999], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_out[0]), [0, 1, 0, 0])

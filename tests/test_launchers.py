@@ -1,0 +1,38 @@
+"""Launcher integration: real (reduced) training with checkpoint/resume and
+batched serving run end-to-end on CPU."""
+import numpy as np
+import pytest
+
+
+@pytest.mark.slow
+def test_train_launcher_with_checkpoint_and_resume(tmp_path):
+    from repro.launch.train import main
+    d = str(tmp_path / "run")
+    losses = main(["--arch", "qwen2-1.5b", "--reduced", "--steps", "8",
+                   "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+                   "--ckpt-every", "4"])
+    assert len(losses) == 8 and np.isfinite(losses).all()
+    # loss should drop on a learnable synthetic stream... at least not blow up
+    assert losses[-1] < losses[0] * 1.5
+
+    # resume continues from the journaled step
+    more = main(["--arch", "qwen2-1.5b", "--reduced", "--steps", "12",
+                 "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+                 "--ckpt-every", "4", "--resume"])
+    assert len(more) == 12 - 8
+
+
+@pytest.mark.slow
+def test_train_launcher_microbatched(tmp_path):
+    from repro.launch.train import main
+    losses = main(["--arch", "qwen2-1.5b", "--reduced", "--steps", "3",
+                   "--batch", "4", "--seq", "16", "--micro", "2"])
+    assert len(losses) == 3 and np.isfinite(losses).all()
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    from repro.launch.serve import main
+    toks = main(["--arch", "rwkv6-3b", "--reduced", "--batch", "2",
+                 "--prompt-len", "16", "--gen", "4"])
+    assert toks.shape[0] == 2 and toks.shape[1] == 4

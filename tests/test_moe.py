@@ -1,0 +1,87 @@
+"""MoE layer properties — the MC/ME-tree analogue (DESIGN.md §4)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.configs.base import MoEConfig
+from repro.models.moe import _pick_group_size, init_moe, moe_mlp, route_topk
+
+
+def test_route_topk_normalized():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    w, idx = route_topk(logits, 3)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < 8
+    # indices are the true top-k
+    ref = np.argsort(-np.asarray(logits), axis=-1)[:, :3]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), -1),
+                                  np.sort(ref, -1))
+
+
+@given(st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_pick_group_size_divides(t):
+    g = _pick_group_size(t)
+    assert t % g == 0 and 1 <= g <= 2048
+
+
+def test_moe_grouping_invariance_when_capacity_ample():
+    """With no-drop capacity, the group decomposition must not change the
+    result (the MC-tree multicast is exact)."""
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y1, aux1 = moe_mlp(p, x, cfg, group_size=32)
+    y2, aux2 = moe_mlp(p, x, cfg, group_size=8)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_moe_deterministic_merge():
+    """Two identical calls produce bit-identical outputs (the ME-tree
+    deterministic-commit analogue: fixed-order einsum reduction)."""
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    f = jax.jit(lambda: moe_mlp(p, x, cfg)[0])
+    a, b = f(), f()
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 most expert slots vanish: the output
+    must shrink in norm (dropped tokens get zero update), not error out."""
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    tight = dataclasses.replace(
+        cfg, moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                           capacity_factor=4.0))
+    p = init_moe(tight, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y_full, _ = moe_mlp(p, x, tight)
+    squeezed = dataclasses.replace(
+        tight, moe=dataclasses.replace(tight.moe, capacity_factor=0.1))
+    y_drop, _ = moe_mlp(p, x, squeezed)
+    assert float(jnp.abs(y_drop).sum()) < float(jnp.abs(y_full).sum())
+
+
+def test_moe_aux_loss_balanced_vs_collapsed():
+    """The load-balance loss must penalize a collapsed router."""
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    _, aux_balanced = moe_mlp(p, x, cfg)
+    p_collapsed = dict(p)
+    router = np.zeros(p["router"].shape, np.float32)
+    router[:, 0] = 50.0                      # everything to expert 0
+    p_collapsed["router"] = jnp.asarray(router)
+    _, aux_collapsed = moe_mlp(p_collapsed, x, cfg)
+    assert float(aux_collapsed) > float(aux_balanced)

@@ -1,0 +1,130 @@
+"""Unit tests for the partitioning (§6.2) and scheduling (§6.3) framework."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (BASELINES, HardwareConfig, OpTables, partition,
+                        random_graph, schedule, scores_from_assignment,
+                        spu_score, spu_usage, validate_schedule)
+from repro.core.memory_model import bram_count, total_memory_kb
+
+
+HW = HardwareConfig(n_spus=8, unified_mem_depth=64, concentration=3,
+                    max_neurons=256, max_post_neurons=128)
+
+
+def test_eq9_eq10_by_hand():
+    # |Q|=5 unique weights, K=3 -> ceil(6/3)=2 lines; |P|=7 posts -> 9 lines
+    assert spu_usage(5, 7, 3) == 9
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=10)
+    assert spu_score(5, 7, hw) == 1
+    assert spu_score(5, 9, hw) == -1          # violation -> negative
+
+
+def test_scores_vectorized_matches_bookkeeping():
+    g = random_graph(16, 32, 300, seed=0)
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, HW.n_spus, g.n_synapses).astype(np.int32)
+    scores = scores_from_assignment(g.weight, g.post, assign, HW)
+    for i in range(HW.n_spus):
+        sel = assign == i
+        expect = HW.unified_mem_depth - (
+            math.ceil((len(np.unique(g.weight[sel])) + 1) / HW.concentration)
+            + len(np.unique(g.post[sel])))
+        assert scores[i] == expect
+
+
+def test_partition_feasible_and_respects_constraint():
+    g = random_graph(20, 40, 500, seed=1)
+    res = partition(g, HW, seed=0, max_iters=20000)
+    assert res.feasible
+    scores = scores_from_assignment(g.weight, g.post, res.assign, HW)
+    assert scores.min() >= 0
+    np.testing.assert_array_equal(scores, res.scores)
+
+
+def test_partition_balance_under_relaxed_constraint():
+    """Fig 14: with relaxed memory the distribution converges to balanced."""
+    g = random_graph(20, 40, 800, seed=2)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    res = partition(g, hw, seed=0, max_iters=2000)
+    counts = np.bincount(res.assign, minlength=8)
+    assert res.feasible
+    # P=0.5 start => near-binomial balance; generous 3-sigma-ish bound
+    assert counts.std() < 0.15 * counts.mean() + 10
+
+
+def test_partition_tightens_with_memory_pressure():
+    """Fig 13a regime (per-SPU load >> #posts): tighter Unified Memory is
+    feasible only via post/weight consolidation, which unbalances the load
+    and DEEPENS the Operation Table; relaxed memory converges back to the
+    balanced (minimum-depth) mapping."""
+    g = random_graph(12, 24, 800, seed=3)
+    ot = {}
+    for L in (14, 200):
+        hw = HardwareConfig(n_spus=8, unified_mem_depth=L, concentration=3,
+                            max_neurons=64, max_post_neurons=32)
+        res = partition(g, hw, seed=0, max_iters=60000)
+        assert res.feasible, f"L={L}: min score {res.scores.min()}"
+        tables = schedule(g, res.assign, hw)
+        validate_schedule(g, tables)
+        ot[L] = tables.depth
+    assert ot[200] <= ot[14], ot
+
+
+@pytest.mark.parametrize("name", list(BASELINES))
+def test_baselines_produce_valid_schedules(name):
+    g = random_graph(16, 32, 400, seed=4)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    res = BASELINES[name](g, hw)
+    tables = schedule(g, res.assign, hw)
+    validate_schedule(g, tables)
+
+
+def test_synapse_rr_is_balanced_post_rr_never_duplicates():
+    g = random_graph(16, 32, 400, seed=5)
+    rr = BASELINES["synapse_rr"](g, HW)
+    counts = np.bincount(rr.assign, minlength=HW.n_spus)
+    assert counts.max() - counts.min() <= 1
+    pn = BASELINES["post_neuron_rr"](g, HW)
+    # every post-neuron lives on exactly one SPU
+    for q in np.unique(g.post):
+        assert len(np.unique(pn.assign[g.post == q])) == 1
+
+
+def test_schedule_depth_lower_bound():
+    """OT depth >= max per-SPU synapse count (each op takes one slot)."""
+    g = random_graph(16, 32, 400, seed=6)
+    res = partition(g, HW, seed=0)
+    tables = schedule(g, res.assign, HW)
+    per_spu = np.bincount(res.assign, minlength=HW.n_spus)
+    assert tables.depth >= per_spu.max()
+    validate_schedule(g, tables)
+
+
+def test_high_fanin_posts_send_late():
+    """§6.3: posts are sent in ascending max-synapses-per-SPU order."""
+    g = random_graph(16, 32, 500, seed=7)
+    res = partition(g, HW, seed=0)
+    tables = schedule(g, res.assign, HW)
+    cmax = {}
+    for q in np.unique(g.post):
+        per = np.bincount(res.assign[g.post == q], minlength=HW.n_spus)
+        cmax[int(q)] = int(per.max())
+    sent = [cmax[q] for q in tables.send_order]
+    assert sent == sorted(sent)
+
+
+def test_memory_model_eq11_paper_point():
+    """Eq. (11) at the Table 2 MNIST hardware point lands in the BRAM
+    ballpark the paper reports (33.5 36Kb BRAMs on XC7Z020)."""
+    hw = HardwareConfig(n_spus=16, unified_mem_depth=128, concentration=3,
+                        weight_bits=4, potential_bits=5, max_neurons=910,
+                        max_post_neurons=126)
+    kb = total_memory_kb(hw, op_table_depth=661)
+    assert 30 < kb < 120, kb
+    brams = bram_count(hw, 661)
+    assert 16 <= brams <= 50, brams

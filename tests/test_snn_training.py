@@ -1,0 +1,103 @@
+"""SNN substrate: LIF dynamics, surrogate-gradient BPTT training on the
+synthetic datasets, quantization pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import mnist_batches, synthetic_mnist, synthetic_shd, shd_batches
+from repro.snn import (LIFParams, MNIST_CONFIG, QuantConfig, SNNConfig,
+                       init_params, lif_step, quantize)
+from repro.snn.lif import LIFIntParams, alpha_to_shift, lif_step_int
+from repro.snn.train import evaluate, rate_encode, train
+
+
+def test_lif_step_eqs_2_4_5():
+    p = LIFParams(alpha=0.25, v_threshold=1.0, v_reset=0.0)
+    v = jnp.array([0.8, 0.8, 0.0])
+    i = jnp.array([0.5, 0.0, 1.2])
+    v_next, s = lif_step(v, i, p)
+    # V_upd = 0.75*0.8 + I
+    np.testing.assert_allclose(np.asarray(s), [1.0, 0.0, 1.0])
+    np.testing.assert_allclose(np.asarray(v_next), [0.0, 0.6, 0.0],
+                               atol=1e-6)
+
+
+def test_integer_lif_matches_float_shape():
+    p = LIFIntParams(leak_shift=2, v_threshold=10, v_reset=0)
+    v = np.array([8, -5, 12], np.int32)
+    i = np.array([4, 1, 0], np.int32)
+    v_next, s = lif_step_int(v, i, p)
+    # leak: v - (v >> 2): 8-2=6, -5-(-2)=-3, 12-3=9
+    np.testing.assert_array_equal(s, [1, 0, 0])
+    np.testing.assert_array_equal(v_next, [0, -2, 9])
+    # numpy and jnp paths identical
+    vj, sj = lif_step_int(jnp.asarray(v), jnp.asarray(i), p)
+    np.testing.assert_array_equal(np.asarray(vj), v_next)
+
+
+def test_alpha_to_shift():
+    assert alpha_to_shift(0.25) == 2
+    assert alpha_to_shift(0.03125) == 5
+
+
+def test_surrogate_gradients_nonzero():
+    for surr in ("relu", "sigmoid", "fast_sigmoid"):
+        g = jax.grad(lambda v: lif_step(jnp.array([0.9]),
+                                        jnp.array([v]),
+                                        LIFParams(), surr)[1].sum())(0.2)
+        assert np.isfinite(g) and g != 0.0, surr
+
+
+def test_rate_encode_statistics():
+    img = jnp.full((4, 10), 0.3)
+    spikes = rate_encode(img, 200, jax.random.PRNGKey(0))
+    assert spikes.shape == (200, 4, 10)
+    assert abs(float(spikes.mean()) - 0.3) < 0.03
+
+
+@pytest.mark.slow
+def test_mnist_sfnn_trains_above_chance():
+    """Paper §7.1 pipeline at reduced scale: the 784-116-10 SFNN with the
+    Table 2 recipe learns the (synthetic) digit task well above chance."""
+    xtr, ytr, xte, yte = synthetic_mnist(n_train=512, n_test=256, seed=0)
+    data = mnist_batches(xtr, ytr, batch=64, seed=0)
+    res = train(MNIST_CONFIG, data, steps=120, lr=5e-4,
+                key=jax.random.PRNGKey(0), encode=True)
+    acc = evaluate(res.params, MNIST_CONFIG, xte, yte,
+                   jax.random.PRNGKey(1), encode=True)
+    assert acc > 0.5, acc    # 10 classes, chance = 0.1
+
+
+@pytest.mark.slow
+def test_shd_srnn_trains_above_chance():
+    cfg = SNNConfig(layer_sizes=(700, 64, 20), recurrent=True,
+                    sparsity=0.8, lif=LIFParams(alpha=0.03125),
+                    surrogate="sigmoid", timesteps=40)
+    xtr, ytr, xte, yte = synthetic_shd(n_train=256, n_test=128,
+                                       timesteps=40, seed=0)
+    data = shd_batches(xtr, ytr, batch=32, seed=0)
+    res = train(cfg, data, steps=150, lr=2e-3, key=jax.random.PRNGKey(0),
+                encode=False)
+    correct = 0
+    from repro.snn.models import forward
+    fwd = jax.jit(lambda p, s: jnp.argmax(forward(p, s, cfg)[0], -1))
+    for i in range(0, len(xte), 64):
+        pred = fwd(res.params, jnp.asarray(
+            xte[i:i + 64].transpose(1, 0, 2).astype(np.float32)))
+        correct += int((np.asarray(pred) == yte[i:i + 64]).sum())
+    acc = correct / len(xte)
+    assert acc > 0.2, acc    # 20 classes, chance = 0.05
+
+
+def test_quantize_drops_zeros_and_scales():
+    cfg = MNIST_CONFIG
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    q = quantize(params, cfg, QuantConfig(weight_bits=4))
+    qmax = 2 ** 3 - 1
+    for w in q.weights:
+        assert w.dtype == np.int32
+        assert np.abs(w).max() <= qmax + 1
+    assert q.sparsity >= cfg.sparsity - 0.01
+    assert q.lif.v_threshold >= 1
+    assert q.n_unique_weights <= 2 * qmax + 2

@@ -23,14 +23,24 @@ MODULES = [
 ]
 
 
+SMOKE_MODULES = ["benchmarks.kernel_benchmarks"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke run: kernel/executor benchmarks only, "
+                         "quick mode")
     args = ap.parse_args()
+    modules = MODULES
+    if args.smoke:
+        args.quick = True
+        modules = SMOKE_MODULES
 
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue
         t0 = time.time()

@@ -2,6 +2,19 @@
 from repro.core.memory_model import HardwareConfig
 from repro.snn.models import MNIST_CONFIG, SHD_CONFIG  # noqa: F401
 
+
+def mnist_scale_random_graph(n_synapses: int = 12000, seed: int = 0):
+    """Random graph + hardware at the paper's MNIST scale (784-126,
+    16 SPUs) — the shared fixture of the executor acceptance test and
+    the engine-speedup benchmark. Returns (graph, HardwareConfig)."""
+    from repro.core.graph import random_graph
+    g = random_graph(784, 126, n_synapses, seed=seed)
+    hw = HardwareConfig(
+        n_spus=16, unified_mem_depth=4 * (n_synapses // 16 // 3 + 126),
+        concentration=3, weight_bits=4, potential_bits=5,
+        max_neurons=910, max_post_neurons=126, clock_mhz=100.0)
+    return g, hw
+
 MNIST_HW = HardwareConfig(
     n_spus=16, unified_mem_depth=128, concentration=3, weight_bits=4,
     potential_bits=5, max_neurons=910, max_post_neurons=126,

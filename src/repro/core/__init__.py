@@ -5,6 +5,7 @@
 #   baselines     round-robin baselines (§7.4.1)
 #   schedule      heuristic scheduling (§6.3)
 #   engine        functional executor + cycle/energy model (§4, §7)
+#   engine_jax    compiled batched executor (lax.scan + Pallas NU)
 #   cost          FPGA resource model (Table 2 fit)
 #   compiler      end-to-end mapping pipeline (Fig. 8)
 from repro.core.graph import SNNGraph, from_quantized, random_graph
@@ -15,9 +16,12 @@ from repro.core.memory_model import (HardwareConfig, spu_score, spu_usage,
 from repro.core.partition import PartitionResult, partition
 from repro.core.baselines import (BASELINES, post_neuron_round_robin,
                                   synapse_round_robin, weight_round_robin)
-from repro.core.schedule import NOP, OpTables, schedule, validate_schedule
+from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
+                                 schedule, validate_schedule)
 from repro.core.engine import (CycleModel, CycleReport, PowerModel,
-                               MergeAlignmentError, run_mapped, run_oracle)
+                               MergeAlignmentError, packet_stats, run_mapped,
+                               run_oracle)
+from repro.core.engine_jax import JaxMappedEngine, run_mapped_batched
 from repro.core.cost import ResourceModel, ResourceReport, resources
 from repro.core.compiler import (CompileReport, compile_snn,
                                  compile_quantized, initialization_packets)
@@ -27,9 +31,11 @@ __all__ = [
     "spu_score", "spu_usage", "scores_from_assignment", "total_memory_bits",
     "total_memory_kb", "bram_count", "PartitionResult", "partition",
     "BASELINES", "post_neuron_round_robin", "synapse_round_robin",
-    "weight_round_robin", "NOP", "OpTables", "schedule", "validate_schedule",
+    "weight_round_robin", "NOP", "LoweredProgram", "OpTables", "lower_tables",
+    "schedule", "validate_schedule",
     "CycleModel", "CycleReport", "PowerModel", "MergeAlignmentError",
-    "run_mapped", "run_oracle", "ResourceModel", "ResourceReport",
+    "packet_stats", "run_mapped", "run_oracle",
+    "JaxMappedEngine", "run_mapped_batched", "ResourceModel", "ResourceReport",
     "resources", "CompileReport", "compile_snn", "compile_quantized",
     "initialization_packets",
 ]

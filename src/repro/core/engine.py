@@ -12,6 +12,10 @@ Two layers:
    distribution phase + 2-cycles/op synaptic phase + ME/NU pipeline drain),
    used for the latency/energy numbers of Tables 2/3 and Figs. 12/13.
 
+``run_mapped`` is the slow, structure-faithful reference; the compiled
+batched counterpart lives in :mod:`repro.core.engine_jax` and must stay
+bit-exact with it (tests/test_engine_jax.py).
+
 Hardware semantics (paper §4.2): spikes generated in timestep t-1 are
 distributed at the start of timestep t; external input spikes for timestep
 t arrive through the Spike Handler in the same window.
@@ -24,8 +28,14 @@ import numpy as np
 
 from repro.core.graph import SNNGraph
 from repro.core.memory_model import HardwareConfig
-from repro.core.schedule import NOP, OpTables
+from repro.core.schedule import NOP, OpTables, lower_tables
 from repro.snn.lif import lif_step_int
+
+
+def packet_stats(pkt_counts: np.ndarray) -> dict:
+    """Per-run stats dict shared by the Python and JAX executors."""
+    return {"packet_counts": pkt_counts,
+            "mean_packets_per_step": float(pkt_counts.mean())}
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +88,7 @@ def run_mapped(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
     n_int = g.n_internal
 
     # routing bitstrings: bit[i] of neuron q == SPU i holds a synapse from q
-    routing = np.zeros((g.n_neurons, m), bool)
-    routing[g.pre, tables.assign] = True
+    routing = lower_tables(g, tables).routing
 
     spike_mem = np.zeros((m, g.n_neurons), bool)   # per-SPU bitmap SRAM
     partial = np.zeros((m, n_int), np.int64)       # per-SPU partial currents
@@ -137,9 +146,7 @@ def run_mapped(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
                     out[t, lq] = 1
         s_prev = out[t]
 
-    stats = {"packet_counts": pkt_counts,
-             "mean_packets_per_step": float(pkt_counts.mean())}
-    return out, v, stats
+    return out, v, packet_stats(pkt_counts)
 
 
 # ---------------------------------------------------------------------------

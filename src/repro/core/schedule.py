@@ -150,6 +150,68 @@ def schedule(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig) -> OpTables:
                     send_slot, send_order, assign.astype(np.int32))
 
 
+@dataclasses.dataclass(frozen=True)
+class LoweredProgram:
+    """Dense array form of a scheduled program, ready for compiled execution.
+
+    The (SPU, slot) grid of the OpTables is flattened into slot-major op
+    streams (all SPUs of slot 0, then slot 1, ...) — the exact order the
+    hardware commits ops — plus the MC-tree routing bitmap. This is the
+    single lowering shared by the Python reference executor
+    (``engine.run_mapped`` uses ``routing``) and the compiled batched
+    executor (``engine_jax`` uses the op streams). The Pre-End/Post-End
+    flags are not needed by the scan executor (its spike gating subsumes
+    them) but are kept so the lowering is the COMPLETE dense program —
+    the form a slot-level hardware executor would consume.
+    """
+    n_inputs: int
+    n_neurons: int
+    n_internal: int
+    n_spus: int
+    depth: int                  # S_OT of the source tables
+    # flattened non-NOP ops, slot-major; all arrays are [n_ops]
+    op_spu: np.ndarray          # int32 SPU executing the op
+    op_slot: np.ndarray         # int32 OT slot of the op
+    op_pre: np.ndarray          # int32 global pre-neuron index
+    op_post_local: np.ndarray   # int32 LOCAL post index (global - n_inputs)
+    op_weight: np.ndarray       # int32 weight
+    op_pre_end: np.ndarray      # bool Pre-End flag
+    op_post_end: np.ndarray     # bool Post-End flag
+    # MC-tree routing bitstrings: routing[q, i] == SPU i holds a synapse of q
+    routing: np.ndarray         # [n_neurons, n_spus] bool
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.op_pre.shape[0])
+
+
+def lower_tables(g: SNNGraph, tables: OpTables) -> LoweredProgram:
+    """Lower scheduled OpTables into the dense :class:`LoweredProgram`."""
+    m, depth = tables.pre.shape
+    spu, slot = np.nonzero(tables.pre != NOP)
+    order = np.lexsort((spu, slot))          # slot-major commit order
+    spu, slot = spu[order], slot[order]
+
+    routing = np.zeros((g.n_neurons, m), bool)
+    routing[g.pre, tables.assign] = True
+
+    return LoweredProgram(
+        n_inputs=g.n_inputs,
+        n_neurons=g.n_neurons,
+        n_internal=g.n_internal,
+        n_spus=m,
+        depth=depth,
+        op_spu=spu.astype(np.int32),
+        op_slot=slot.astype(np.int32),
+        op_pre=tables.pre[spu, slot].astype(np.int32),
+        op_post_local=(tables.post[spu, slot] - g.n_inputs).astype(np.int32),
+        op_weight=tables.weight[spu, slot].astype(np.int32),
+        op_pre_end=tables.pre_end[spu, slot].copy(),
+        op_post_end=tables.post_end[spu, slot].copy(),
+        routing=routing,
+    )
+
+
 def validate_schedule(g: SNNGraph, tables: OpTables) -> None:
     """Legality checks (DESIGN.md §7.3): raises AssertionError on violation."""
     m, depth = tables.pre.shape

@@ -2,8 +2,9 @@
 # (spike_accum), the centralized Neuron Unit (lif_update), and the WKV-6
 # recurrence (wkv6 — the rwkv6 roofline fix, see kernels/wkv6.py).
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
-from repro.kernels.ops import lif_update, spike_accum, ssd, wkv6
+from repro.kernels.ops import (lif_update, lif_update_int, spike_accum, ssd,
+                               wkv6)
 from repro.kernels.ref import lif_update_ref, spike_accum_ref, wkv6_ref
 
-__all__ = ["lif_update", "spike_accum", "ssd", "wkv6", "lif_update_ref",
-           "spike_accum_ref", "wkv6_ref"]
+__all__ = ["lif_update", "lif_update_int", "spike_accum", "ssd", "wkv6",
+           "lif_update_ref", "spike_accum_ref", "wkv6_ref"]

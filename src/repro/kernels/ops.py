@@ -37,6 +37,13 @@ def lif_update(v, current, *, alpha, v_th=1.0, v_reset=0.0, block=(8, 128),
                        block=block, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("p", "block", "interpret"))
+def lif_update_int(v, current, p, *, block=(8, 128), interpret=None):
+    from repro.kernels.lif_update import lif_update_int as _lif_update_int
+    interpret = _default_interpret() if interpret is None else interpret
+    return _lif_update_int(v, current, p, block=block, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r, k, v, w_log, u, state0, *, chunk=64, interpret=None):
     from repro.kernels.wkv6 import wkv6_pallas

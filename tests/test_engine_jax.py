@@ -1,0 +1,137 @@
+"""Parity tests for the compiled batched executor (engine_jax).
+
+The deterministic-commit property must survive the lowering: for any
+mapped program, ``run_mapped_batched`` must equal ``run_oracle`` (and
+hence ``run_mapped``) BIT-EXACTLY, and its per-timestep MC packet counts
+must equal ``run_mapped``'s stats so CycleModel reports are unchanged.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.snn_paper import mnist_scale_random_graph
+from repro.core import (HardwareConfig, JaxMappedEngine, compile_snn,
+                        lower_tables, random_graph, run_mapped,
+                        run_mapped_batched, run_oracle)
+from repro.core.graph import SNNGraph
+
+
+def _hw(g, m=4, k=2):
+    return HardwareConfig(
+        n_spus=m, unified_mem_depth=4 * (g.n_synapses // m + g.n_internal),
+        concentration=k, max_neurons=g.n_neurons,
+        max_post_neurons=g.n_internal)
+
+
+def _feedforward(n_inputs=16, n_internal=12, n_synapses=150, seed=5):
+    """Random graph restricted to input->internal synapses only."""
+    g = random_graph(n_inputs, n_internal, n_synapses, seed=seed)
+    ff = g.pre < n_inputs
+    assert ff.sum() >= 8
+    return SNNGraph(g.n_inputs, g.n_neurons, g.pre[ff], g.post[ff],
+                    g.weight[ff], g.lif, g.output_slice)
+
+
+def _ext(g, b, t, rate=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.random((b, t, g.n_inputs)) < rate).astype(np.int32)
+
+
+@pytest.mark.parametrize("nu_kernel", [True, False],
+                         ids=["pallas_nu", "jnp_nu"])
+def test_recurrent_batched_bit_exact_vs_oracle(nu_kernel):
+    g = random_graph(12, 20, 160, seed=3)   # pre spans inputs AND internal
+    assert (g.pre >= g.n_inputs).any(), "graph must contain recurrence"
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    ext = _ext(g, b=4, t=9, seed=1)
+    s, v, _ = run_mapped_batched(g, tables, ext, nu_kernel=nu_kernel)
+    for b in range(ext.shape[0]):
+        s_ref, v_ref = run_oracle(g, ext[b])
+        np.testing.assert_array_equal(s[b], s_ref)
+        np.testing.assert_array_equal(v[b], v_ref)
+
+
+def test_feedforward_batched_bit_exact_vs_oracle():
+    g = _feedforward()
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    ext = _ext(g, b=3, t=12, rate=0.5, seed=2)
+    s, v, _ = run_mapped_batched(g, tables, ext)
+    for b in range(ext.shape[0]):
+        s_ref, v_ref = run_oracle(g, ext[b])
+        np.testing.assert_array_equal(s[b], s_ref)
+        np.testing.assert_array_equal(v[b], v_ref)
+
+
+def test_packet_counts_match_run_mapped_stats():
+    g = random_graph(10, 14, 100, seed=7)
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    ext = _ext(g, b=3, t=8, seed=4)
+    _, _, stats = run_mapped_batched(g, tables, ext)
+    assert stats["packet_counts"].shape == (3, 8)
+    for b in range(3):
+        _, _, ref = run_mapped(g, tables, ext[b])
+        np.testing.assert_array_equal(stats["packet_counts"][b],
+                                      ref["packet_counts"])
+    assert stats["mean_packets_per_step"] == pytest.approx(
+        float(stats["packet_counts"].mean()))
+
+
+def test_unbatched_input_matches_run_mapped_shapes():
+    g = random_graph(8, 10, 60, seed=9)
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    ext = _ext(g, b=1, t=6, seed=5)[0]
+    s_j, v_j, st_j = run_mapped_batched(g, tables, ext)
+    s_p, v_p, st_p = run_mapped(g, tables, ext)
+    assert s_j.shape == s_p.shape and v_j.shape == v_p.shape
+    np.testing.assert_array_equal(s_j, s_p)
+    np.testing.assert_array_equal(v_j, v_p)
+    np.testing.assert_array_equal(st_j["packet_counts"],
+                                  st_p["packet_counts"])
+
+
+def test_mnist_scale_graph_bit_exact():
+    """Acceptance: bit-exact on the MNIST-scale graph (784-126, 16 SPUs)."""
+    g, hw = mnist_scale_random_graph()
+    tables, report, _ = compile_snn(g, hw, max_iters=40000)
+    assert report.feasible
+    ext = _ext(g, b=2, t=10, rate=0.2, seed=0)
+    s, v, stats = run_mapped_batched(g, tables, ext)
+    for b in range(2):
+        s_ref, v_ref = run_oracle(g, ext[b])
+        np.testing.assert_array_equal(s[b], s_ref)
+        np.testing.assert_array_equal(v[b], v_ref)
+    _, _, ref = run_mapped(g, tables, ext[0])
+    np.testing.assert_array_equal(stats["packet_counts"][0],
+                                  ref["packet_counts"])
+
+
+def test_engine_reuse_and_cache():
+    g = random_graph(8, 10, 60, seed=11)
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    eng = JaxMappedEngine(g, tables)
+    a = eng.run(_ext(g, 2, 5, seed=1))
+    b = eng.run(_ext(g, 2, 5, seed=1))          # same input, same engine
+    np.testing.assert_array_equal(a[0], b[0])
+    from repro.core import engine_jax
+    n0 = len(engine_jax._ENGINE_CACHE)
+    run_mapped_batched(g, tables, _ext(g, 2, 5, seed=1))
+    n1 = len(engine_jax._ENGINE_CACHE)
+    run_mapped_batched(g, tables, _ext(g, 3, 7, seed=2))  # new shape, same prog
+    assert len(engine_jax._ENGINE_CACHE) == n1 == n0 + 1
+
+
+def test_lower_tables_covers_all_synapses():
+    g = random_graph(10, 12, 90, seed=13)
+    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    lw = lower_tables(g, tables)
+    assert lw.n_ops == g.n_synapses
+    got = sorted(zip(lw.op_pre.tolist(),
+                     (lw.op_post_local + g.n_inputs).tolist(),
+                     lw.op_weight.tolist()))
+    want = sorted(zip(g.pre.tolist(), g.post.tolist(), g.weight.tolist()))
+    assert got == want
+    # slot-major commit order
+    assert (np.diff(lw.op_slot) >= 0).all()
+    # routing bitmap: SPU i flagged for q iff q has a synapse mapped there
+    for q in range(g.n_neurons):
+        spus = set(tables.assign[g.pre == q].tolist())
+        assert set(np.flatnonzero(lw.routing[q]).tolist()) == spus

@@ -6,6 +6,9 @@ oracle BIT-EXACTLY — this is the paper's central correctness claim for the
 bufferless ME tree (§4.3) and the schedule alignment (§6.3).
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HardwareConfig, compile_snn, random_graph,

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (lif_update, lif_update_ref, spike_accum,
-                           spike_accum_ref)
+from repro.kernels import (lif_update, lif_update_int, lif_update_ref,
+                           spike_accum, spike_accum_ref)
+from repro.snn.lif import LIFIntParams, lif_step_int
 
 
 SHAPES = [(1, 7, 5), (3, 128, 128), (5, 300, 70), (8, 513, 257),
@@ -84,3 +85,20 @@ def test_lif_update_reset_semantics():
     np.testing.assert_allclose(np.asarray(v_out[0]),
                                [0.5, -0.25, -1.0, 0.999], rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(s_out[0]), [0, 1, 0, 0])
+
+
+@pytest.mark.parametrize("shape", [(9,), (1, 5), (3, 200), (16, 126)])
+@pytest.mark.parametrize("leak_shift", [1, 2, 4])
+def test_lif_update_int_matches_int_oracle(shape, leak_shift):
+    """The integer Neuron-Unit kernel must be BIT-EXACT with lif_step_int
+    (the deterministic-commit reference), including negative potentials
+    (arithmetic shift)."""
+    p = LIFIntParams(leak_shift=leak_shift, v_threshold=15, v_reset=0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(23))
+    v = jax.random.randint(k1, shape, -50, 50, jnp.int32)
+    cur = jax.random.randint(k2, shape, -30, 30, jnp.int32)
+    v_out, s_out = lif_update_int(v, cur, p, interpret=True)
+    v_ref, s_ref = lif_step_int(v, cur, p)
+    assert v_out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(v_out), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s_ref))

@@ -22,6 +22,7 @@ def _positions(cfg, b, s):
     return None
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCH_NAMES)
 def test_reduced_forward_and_train_step(name):
     cfg = get_reduced(name)
@@ -48,6 +49,7 @@ def test_reduced_forward_and_train_step(name):
     assert np.isfinite(gsum) and gsum > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCH_NAMES)
 def test_reduced_prefill_decode_consistency(name):
     """prefill(tokens[:N]) + step-by-step decode of the rest must agree
@@ -81,6 +83,7 @@ def test_reduced_prefill_decode_consistency(name):
             np.asarray(full[:, t], np.float32), rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["glm4-9b", "deepseek-v3-671b"])
 def test_unrolled_decode_matches_scanned(name):
     """§Perf decode iteration 2: the unrolled-layer decode (per-layer

@@ -6,8 +6,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import compile_snn, from_quantized, run_mapped, CycleModel
-from repro.snn import QuantConfig, SNNConfig, init_params, quantize
+from repro.core import compile as compile_program
+from repro.snn import QuantConfig, SNNConfig, quantize
 from repro.snn.models import forward
 from repro.snn.train import train
 from repro.data import mnist_batches, synthetic_mnist, synthetic_shd, shd_batches
@@ -66,20 +66,22 @@ def accuracy(cfg, params, xte, yte, encode: bool, key=None):
 def simulate_inference(cfg, params, hw, qc: QuantConfig, sample,
                        encode: bool, key=None, method="framework",
                        max_iters: int = 40000):
-    """quantize -> map -> schedule -> mapped execution -> cycle model."""
+    """quantize -> compile to a Program artifact -> run -> profile.
+
+    Returns ``(q, program, cycle_report)``; graph/tables/compile report
+    hang off the artifact (``program.graph`` / ``.tables`` / ``.report``).
+    """
     import jax.numpy as jnp
     from repro.snn.train import rate_encode
     q = quantize(params, cfg, qc)
-    g = from_quantized(q)
-    tables, report, part = compile_snn(g, hw, method=method, seed=0,
-                                       max_iters=max_iters)
+    program = compile_program(q, hw, method=method, seed=0,
+                              max_iters=max_iters)
     key = key if key is not None else jax.random.PRNGKey(2)
     if encode:
         spikes = np.asarray(rate_encode(jnp.asarray(sample[None]),
                                         cfg.timesteps, key))[:, 0]
     else:
         spikes = sample.astype(np.int32)
-    s_map, v_map, stats = run_mapped(g, tables, spikes.astype(np.int32))
-    cm = CycleModel(hw)
-    rep = cm.run(stats["packet_counts"], tables.depth, q.n_total_synapses)
-    return q, g, tables, report, rep
+    _, _, stats = program.run(spikes.astype(np.int32), engine="python")
+    prof = program.profile(stats, n_synapses=q.n_total_synapses)
+    return q, program, prof.cycle

@@ -20,8 +20,9 @@ def run(quick: bool = False) -> list[tuple]:
         cfg, params, (xte, yte) = trained_shd_snn(
             sparsity=s, steps=20 if quick else 60,
             timesteps=20 if quick else 40)
-        q, g, tables, report, rep = simulate_inference(
+        q, program, rep = simulate_inference(
             cfg, params, HW, QuantConfig(6, 9), xte[0], encode=False)
+        report = program.report
         tag = f"sparsity={s}"
         rows += [
             (f"fig12.ot_depth[{tag}]", report.ot_depth, "grows w/ density"),

@@ -18,8 +18,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import trained_shd_snn
-from repro.core import (BASELINES, HardwareConfig, compile_snn,
-                        from_quantized, schedule)
+from repro.core import compile as compile_program
+from repro.core import BASELINES, HardwareConfig, from_quantized, schedule
 from repro.core.memory_model import spu_usage, total_memory_kb
 from repro.snn import QuantConfig, quantize
 
@@ -59,7 +59,8 @@ def run(quick: bool = False) -> list[tuple]:
               for f in ((1.0, 2.5) if quick else (0.95, 1.1, 1.6, 2.5, 4.0))]
     for d in depths:
         hw = _hw(d, g)
-        tables, report, part = compile_snn(g, hw, seed=0, max_iters=200000)
+        program = compile_program(g, hw, seed=0, max_iters=200000)
+        report = program.report
         rows.append((f"fig13.framework.ot_depth[um={d}]",
                      report.ot_depth if report.feasible else -1,
                      f"feasible={report.feasible}"))
@@ -68,9 +69,9 @@ def run(quick: bool = False) -> list[tuple]:
     # headline check: with relaxed memory the framework reaches the
     # synapse-RR optimum within a few percent (paper: 536 vs 539)
     hw = _hw(int(base_um["synapse_rr"] * 1.2), g)
-    tables, report, part = compile_snn(g, hw, seed=0, max_iters=60000)
+    program = compile_program(g, hw, seed=0, max_iters=60000)
     rows.append(("fig13.framework_vs_synapse_rr",
-                 report.ot_depth / base_ot["synapse_rr"],
+                 program.ot_depth / base_ot["synapse_rr"],
                  "paper ratio ~0.99"))
     return rows
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.fig13_partitioning import _hw, _instance
-from repro.core import compile_snn
+from repro.core import compile as compile_program
 
 
 def run(quick: bool = False) -> list[tuple]:
@@ -21,8 +21,8 @@ def run(quick: bool = False) -> list[tuple]:
     factors = (1.0, 3.0) if quick else (0.9, 1.2, 2.0, 4.0)
     for f in factors:
         d = int(anchor * f)
-        tables, report, part = compile_snn(g, _hw(d, g), seed=0,
-                                           max_iters=60000)
+        report = compile_program(g, _hw(d, g), seed=0,
+                                 max_iters=60000).report
         syn = report.spu_synapse_counts
         tag = f"um={d}"
         rows += [

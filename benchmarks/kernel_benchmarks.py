@@ -9,9 +9,10 @@ What IS measurable here and carries to hardware:
     real spike rasters this is the latency/energy ∝ sparsity property of
     the paper at MXU granularity;
   * flops avoided = skipped_tiles * tile_flops;
-  * mapped-executor throughput — the compiled batched executor
-    (``engine_jax.run_mapped_batched``, XLA end to end) vs the Python
-    reference ``run_mapped``, batch=16 on the MNIST-scale graph. The
+  * mapped-executor throughput — one compiled ``Program`` artifact
+    driven through its engines: the compiled batched executor
+    (``program.run(ext)``, XLA end to end) vs the Python reference
+    (``engine="python"``), batch=16 on the MNIST-scale graph. The
     acceptance bar is >= 20x; this IS real wall-clock.
 """
 from __future__ import annotations
@@ -24,7 +25,7 @@ import numpy as np
 
 from benchmarks.common import trained_mnist_snn
 from repro.configs.snn_paper import mnist_scale_random_graph
-from repro.core import JaxMappedEngine, compile_snn, run_mapped, run_oracle
+from repro.core import compile as compile_program
 from repro.snn.train import rate_encode
 
 
@@ -48,23 +49,22 @@ def engine_speedup(quick: bool = False, batch: int = 16) -> list[tuple]:
     t_steps = 10 if quick else 20
     n_ref = 1 if quick else 2
     g, hw = mnist_scale_random_graph(n_synapses=n_syn)
-    tables, _, _ = compile_snn(g, hw, max_iters=40000)
+    program = compile_program(g, hw, max_iters=40000)
     rng = np.random.default_rng(0)
     ext = (rng.random((batch, t_steps, 784)) < 0.2).astype(np.int32)
 
-    eng = JaxMappedEngine(g, tables)
-    eng.run(ext)                                   # warm-up: compile
+    program.run(ext)                               # warm-up: compile
     t0 = time.perf_counter()
-    s_jax, v_jax, _ = eng.run(ext)
+    s_jax, v_jax, _ = program.run(ext)             # owned engine, reused
     jax_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     for i in range(n_ref):
-        run_mapped(g, tables, ext[i])
+        program.run(ext[i], engine="python")
     py_per_image = (time.perf_counter() - t0) / n_ref
     py_batch_s = py_per_image * batch
 
-    s_ref, v_ref = run_oracle(g, ext[0])
+    s_ref, v_ref, _ = program.run(ext[0], engine="oracle")
     exact = (np.array_equal(s_jax[0], s_ref)
              and np.array_equal(v_jax[0], v_ref))
     return [

@@ -44,10 +44,11 @@ def run(quick: bool = False) -> list[tuple]:
                     _prune_to_sparsity(params, cfg, 0.8874))):
         samples = xte[:3 if quick else 10]
         reports = []
-        q = g = tables = report = None
+        q = report = None
         for s in samples:
-            q, g, tables, report, rep = simulate_inference(
+            q, program, rep = simulate_inference(
                 cfg, p, MNIST_HW, QuantConfig(4, 5), s, encode=True)
+            report = program.report
             reports.append(rep)
         lat_ms = float(np.mean([r.latency_us for r in reports])) / 1e3
         rows += [

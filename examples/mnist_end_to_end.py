@@ -1,18 +1,18 @@
 """End-to-end driver (paper §7.1/§7.2): train the 784-116-10 SFNN with
-surrogate-gradient BPTT, quantize to the 4-bit hardware format, map +
-schedule onto the Table-2 hardware (16 SPUs), run cycle-accurate mapped
-inference, and report the full Table-3 metric row INCLUDING mapped-engine
-accuracy (the engine is bit-exact wrt the integer oracle, so quantized
-accuracy == deployed accuracy).
+surrogate-gradient BPTT, quantize to the 4-bit hardware format, compile
+it into a `Program` artifact on the Table-2 hardware (16 SPUs), run
+cycle-accurate mapped inference, and report the full Table-3 metric row
+INCLUDING mapped-engine accuracy (the engine is bit-exact wrt the
+integer oracle, so quantized accuracy == deployed accuracy).
 
     PYTHONPATH=src python examples/mnist_end_to_end.py [--steps 300]
-        [--engine {python,jax}]
+        [--engine {python,jax}] [--save PATH]
 
-``--engine python`` (default) runs the per-image reference executor
-``run_mapped``; ``--engine jax`` runs the compiled batched executor
-``engine_jax.run_mapped_batched`` — all test images in ONE XLA call,
-bit-exact with the python engine and with identical packet counts, so
-the CycleModel latency/energy rows are unchanged.
+``--engine python`` (default) runs the per-image reference executor;
+``--engine jax`` runs the compiled batched executor — all test images
+in ONE XLA call, bit-exact with the python engine and with identical
+packet counts, so the profile rows are unchanged. ``--save`` persists
+the compiled artifact for later serving (see examples/serve_snn.py).
 """
 import argparse
 
@@ -21,8 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.snn_paper import MNIST_HW
-from repro.core import (CycleModel, compile_snn, from_quantized, run_mapped,
-                        run_mapped_batched)
+from repro.core import compile, from_quantized
 from repro.data import load_mnist, mnist_batches
 from repro.snn import MNIST_CONFIG, QuantConfig, quantize
 from repro.snn.train import evaluate, rate_encode, train
@@ -34,7 +33,9 @@ def main():
     ap.add_argument("--test-images", type=int, default=20)
     ap.add_argument("--engine", choices=("python", "jax"), default="python",
                     help="mapped executor: per-image reference loop or "
-                         "compiled batched engine_jax")
+                         "compiled batched engine")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="persist the compiled Program artifact to PATH")
     args = ap.parse_args()
 
     print("== 1. data (real MNIST if present, else synthetic) ==")
@@ -55,38 +56,32 @@ def main():
     print(f"nonzero synapses: {g.n_synapses} "
           f"(post-quantization sparsity {q.sparsity:.4f})")
 
-    print("== 4. co-optimized mapping + scheduling (16 SPUs, UM 128) ==")
-    tables, report, part = compile_snn(g, MNIST_HW, max_iters=40000)
-    print(f"feasible={report.feasible} iters={report.iterations} "
-          f"OT depth={report.ot_depth} (paper: 661) "
-          f"BRAMs={report.resources.brams} (paper: 33.5)")
+    print("== 4. compile to a Program artifact (16 SPUs, UM 128) ==")
+    program = compile(g, MNIST_HW, engine=args.engine, max_iters=40000)
+    rep = program.report
+    print(f"feasible={program.feasible} iters={rep.iterations} "
+          f"OT depth={program.ot_depth} (paper: 661) "
+          f"BRAMs={rep.resources.brams} (paper: 33.5)")
+    if args.save:
+        print(f"saved artifact: {program.save(args.save)}")
 
     print(f"== 5. cycle-accurate mapped inference (engine={args.engine}) ==")
-    cm = CycleModel(MNIST_HW)
     n_img = args.test_images
     ext = np.stack([np.asarray(rate_encode(
         jnp.asarray(xte[i][None]), MNIST_CONFIG.timesteps,
         jax.random.fold_in(jax.random.PRNGKey(2), i)))[:, 0]
         for i in range(n_img)]).astype(np.int32)      # [B, T, 784]
-    if args.engine == "jax":
-        s_all, _, stats_all = run_mapped_batched(g, tables, ext)
-        per_image = [(s_all[i], stats_all["packet_counts"][i])
-                     for i in range(n_img)]
-    else:
-        per_image = []
-        for i in range(n_img):
-            s_map, _, stats = run_mapped(g, tables, ext[i])
-            per_image.append((s_map, stats["packet_counts"]))
-    correct, lat, en = 0, [], []
-    for i, (s_map, pkts) in enumerate(per_image):
-        out_lo = g.output_slice[0] - g.n_inputs
-        counts = s_map.sum(0)[out_lo:out_lo + 10]
-        correct += int(np.argmax(counts) == yte[i])
-        rep = cm.run(pkts, tables.depth, q.n_total_synapses)
-        lat.append(rep.latency_us)
-        en.append(rep.energy_mj)
-    print(f"mapped-engine accuracy: {correct / args.test_images:.3f} "
-          f"over {args.test_images} images")
+    s_all, _, stats = program.run(ext)
+    prof = program.profile(stats, n_synapses=q.n_total_synapses)
+
+    out_lo = g.output_slice[0] - g.n_inputs
+    correct = sum(
+        int(np.argmax(s_all[i].sum(0)[out_lo:out_lo + 10]) == yte[i])
+        for i in range(n_img))
+    lat = [r.latency_us for r in prof.per_sample]
+    en = [r.energy_mj for r in prof.per_sample]
+    print(f"mapped-engine accuracy: {correct / n_img:.3f} "
+          f"over {n_img} images")
     print(f"latency: {np.mean(lat):.1f} us/image   (paper: 149 us)")
     print(f"energy : {np.mean(en):.5f} mJ/image (paper: 0.02563 mJ)")
     print(f"        {np.mean(en) * 1e6 / q.n_total_synapses:.4f} nJ/synapse "

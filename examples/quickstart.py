@@ -1,14 +1,15 @@
-"""Quickstart: the whole SupraSNN flow on a toy network in ~30 lines,
-ending with the compiled batched executor (the ``--engine jax`` path of
-examples/mnist_end_to_end.py).
+"""Quickstart: the whole SupraSNN flow on a toy network in ~40 lines —
+compile ONCE into a `Program` artifact, then run / profile / save / load
+it (the deployment flow of examples/serve_snn.py).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+from pathlib import Path
+
 import numpy as np
 
-from repro.core import (CycleModel, HardwareConfig, compile_snn,
-                        random_graph, run_mapped, run_mapped_batched,
-                        run_oracle)
+from repro.core import HardwareConfig, Program, compile, random_graph
 
 # 1. an irregular spiking network: 16 inputs, 32 internal neurons,
 #    300 nonzero synapses (paper Fig. 2b style)
@@ -19,31 +20,44 @@ g = random_graph(n_inputs=16, n_internal=32, n_synapses=300, seed=0)
 hw = HardwareConfig(n_spus=8, unified_mem_depth=48, concentration=3,
                     max_neurons=64, max_post_neurons=32)
 
-# 3. co-optimized mapping + scheduling (paper §6: probabilistic
-#    partitioning + heuristic scheduling)
-tables, report, part = compile_snn(g, hw)
-print(f"feasible={report.feasible}  operation-table depth={report.ot_depth}"
-      f"  SPU loads={report.spu_synapse_counts.tolist()}")
+# 3. compile = the explicit pass pipeline (partition -> schedule ->
+#    validate -> lower, paper §6 / Fig. 8) producing ONE artifact
+program = compile(g, hw)
+rep = program.report
+print(f"feasible={program.feasible}  operation-table depth={program.ot_depth}"
+      f"  SPU loads={rep.spu_synapse_counts.tolist()}")
 
-# 4. execute 20 timesteps; the mapped engine must match the dense
-#    integer-LIF oracle BIT-EXACTLY (deterministic commit, paper §4.3)
+# 4. execute 20 timesteps on all three engines through the SAME surface;
+#    the mapped program must match the dense integer-LIF oracle
+#    BIT-EXACTLY (deterministic commit, paper §4.3)
 ext = (np.random.default_rng(0).random((20, 16)) < 0.3).astype(np.int32)
-s_oracle, _ = run_oracle(g, ext)
-s_mapped, _, stats = run_mapped(g, tables, ext)
+s_oracle, _, _ = program.run(ext, engine="oracle")
+s_mapped, _, stats = program.run(ext, engine="python")
 assert np.array_equal(s_oracle, s_mapped), "determinism violated!"
 print(f"bit-exact over {s_oracle.size} neuron-timesteps "
       f"({int(s_oracle.sum())} spikes)")
 
-# 5. cycle-accurate latency/energy (paper Table 3 metrics)
-rep = CycleModel(hw).run(stats["packet_counts"], tables.depth, g.n_synapses)
-print(f"latency={rep.latency_us:.1f} us  energy={rep.energy_mj * 1e3:.3f} uJ"
-      f"  ({rep.energy_per_synapse_nj:.3f} nJ/synapse)")
+# 5. cycle-accurate latency/energy + FPGA resources in one call
+prof = program.profile(stats)
+print(f"latency={prof.latency_us:.1f} us  "
+      f"energy={prof.energy_mj * 1e3:.3f} uJ"
+      f"  ({prof.energy_per_synapse_nj:.3f} nJ/synapse)"
+      f"  BRAMs={prof.resources.brams}")
 
-# 6. the same program, compiled + batched (lax.scan + Pallas Neuron Unit):
-#    8 spike trains through one XLA call, still bit-exact per sample
+# 6. the compiled batched engine (lax.scan + Pallas Neuron Unit) is the
+#    default: 8 spike trains through one XLA call, still bit-exact
 ext_b = (np.random.default_rng(1).random((8, 20, 16)) < 0.3).astype(np.int32)
-s_b, _, stats_b = run_mapped_batched(g, tables, ext_b)
+s_b, _, stats_b = program.run(ext_b)          # engine="jax"
 for i in range(8):
-    assert np.array_equal(s_b[i], run_oracle(g, ext_b[i])[0])
+    assert np.array_equal(s_b[i], program.run(ext_b[i], engine="oracle")[0])
 print(f"batched engine: {s_b.shape[0]} samples in one call, bit-exact; "
       f"mean packets/step={stats_b['mean_packets_per_step']:.1f}")
+
+# 7. persist the artifact: save once, serve anywhere — load never
+#    re-runs the stochastic partitioner and round-trips bit-exactly
+path = program.save(Path(tempfile.mkdtemp()) / "toy_program")
+loaded = Program.load(path)
+s_l, _, _ = loaded.run(ext_b)
+assert np.array_equal(s_l, s_b), "artifact round-trip must be bit-exact"
+print(f"saved+loaded {path.name}: outputs identical, "
+      f"{len(loaded.init_packets())} init packets")

@@ -1,5 +1,6 @@
 """Recurrent SNN on (synthetic) SHD — the paper's second benchmark: a
-700-300-20 SRNN at 87% sparsity mapped onto the 64-SPU XC7Z030 config.
+700-300-20 SRNN at 87% sparsity compiled into a `Program` artifact on
+the 64-SPU XC7Z030 config.
 
     PYTHONPATH=src python examples/shd_srnn.py [--steps 200] [--hidden 300]
 """
@@ -9,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs.snn_paper import SHD_HW
-from repro.core import CycleModel, compile_snn, from_quantized, run_mapped
+from repro.core import compile
 from repro.data import shd_batches, synthetic_shd
 from repro.snn import LIFParams, QuantConfig, SNNConfig, quantize
 from repro.snn.train import train
@@ -34,20 +35,18 @@ def main():
 
     print("== quantize (7-bit weights / 12-bit potential, Table 2) ==")
     q = quantize(res.params, cfg, QuantConfig(7, 12))
-    g = from_quantized(q)
-    print(f"nonzero synapses: {g.n_synapses}")
+    print(f"nonzero synapses: {q.n_nonzero_synapses}")
 
-    print("== map onto the 64-SPU XC7Z030 config ==")
-    tables, report, part = compile_snn(g, SHD_HW, max_iters=60000)
-    print(f"feasible={report.feasible} OT depth={report.ot_depth} "
+    print("== compile onto the 64-SPU XC7Z030 config ==")
+    program = compile(q, SHD_HW, max_iters=60000)
+    print(f"feasible={program.feasible} OT depth={program.ot_depth} "
           f"(paper: 742)")
 
     print("== mapped inference on one sample ==")
-    s_map, _, stats = run_mapped(g, tables, xte[0].astype(np.int32))
-    rep = CycleModel(SHD_HW).run(stats["packet_counts"], tables.depth,
-                                 q.n_total_synapses)
-    print(f"latency {rep.latency_us / 1e3:.3f} ms/sample (paper: 1.41 ms), "
-          f"energy {rep.energy_mj:.3f} mJ (paper: 0.77)")
+    _, _, stats = program.run(xte[0].astype(np.int32), engine="python")
+    prof = program.profile(stats, n_synapses=q.n_total_synapses)
+    print(f"latency {prof.latency_us / 1e3:.3f} ms/sample (paper: 1.41 ms), "
+          f"energy {prof.energy_mj:.3f} mJ (paper: 0.77)")
 
 
 if __name__ == "__main__":

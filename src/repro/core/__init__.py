@@ -7,7 +7,9 @@
 #   engine        functional executor + cycle/energy model (§4, §7)
 #   engine_jax    compiled batched executor (lax.scan + Pallas NU)
 #   cost          FPGA resource model (Table 2 fit)
-#   compiler      end-to-end mapping pipeline (Fig. 8)
+#   passes        explicit compile passes (partition/schedule/validate/lower)
+#   program       the Program artifact: compile -> run/profile/save/load
+#   compiler      deprecated pre-Program wrappers
 from repro.core.graph import SNNGraph, from_quantized, random_graph
 from repro.core.memory_model import (HardwareConfig, spu_score, spu_usage,
                                      scores_from_assignment,
@@ -19,12 +21,16 @@ from repro.core.baselines import (BASELINES, post_neuron_round_robin,
 from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
                                  schedule, validate_schedule)
 from repro.core.engine import (CycleModel, CycleReport, PowerModel,
-                               MergeAlignmentError, packet_stats, run_mapped,
-                               run_oracle)
+                               MergeAlignmentError, oracle_packet_counts,
+                               packet_stats, run_mapped, run_oracle)
 from repro.core.engine_jax import JaxMappedEngine, run_mapped_batched
 from repro.core.cost import ResourceModel, ResourceReport, resources
-from repro.core.compiler import (CompileReport, compile_snn,
-                                 compile_quantized, initialization_packets)
+from repro.core.passes import (CompileReport, build_report,
+                               initialization_packets, lower_pass,
+                               partition_pass, schedule_pass, validate_pass)
+from repro.core.program import (ENGINES, PROGRAM_FORMAT_VERSION, Program,
+                                ProfileReport, compile)
+from repro.core.compiler import compile_snn, compile_quantized
 
 __all__ = [
     "SNNGraph", "from_quantized", "random_graph", "HardwareConfig",
@@ -34,8 +40,14 @@ __all__ = [
     "weight_round_robin", "NOP", "LoweredProgram", "OpTables", "lower_tables",
     "schedule", "validate_schedule",
     "CycleModel", "CycleReport", "PowerModel", "MergeAlignmentError",
-    "packet_stats", "run_mapped", "run_oracle",
+    "oracle_packet_counts", "packet_stats", "run_mapped", "run_oracle",
     "JaxMappedEngine", "run_mapped_batched", "ResourceModel", "ResourceReport",
-    "resources", "CompileReport", "compile_snn", "compile_quantized",
-    "initialization_packets",
+    "resources",
+    # pass pipeline + artifact API
+    "CompileReport", "build_report", "initialization_packets", "lower_pass",
+    "partition_pass", "schedule_pass", "validate_pass",
+    "ENGINES", "PROGRAM_FORMAT_VERSION", "Program", "ProfileReport",
+    "compile",
+    # deprecated wrappers
+    "compile_snn", "compile_quantized",
 ]

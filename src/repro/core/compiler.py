@@ -1,116 +1,54 @@
-"""End-to-end SupraSNN compiler: quantized SNN -> partition -> schedule ->
-operation tables + reports + initialization packet stream.
+"""Deprecated compile wrappers (pre-Program API).
 
-This is the "software framework" box of paper Fig. 8.
+The end-to-end pipeline now lives in :mod:`repro.core.passes` (the
+explicit passes) and :mod:`repro.core.program` (the :class:`Program`
+artifact). ``compile_snn`` / ``compile_quantized`` remain as thin
+delegating wrappers so pre-artifact callers keep working; new code
+should call :func:`repro.core.program.compile` and use the artifact::
+
+    program = compile(g, hw)                  # was: compile_snn(g, hw)
+    tables, report, part = (program.tables,   # the old 3-tuple
+                            program.report, program.part)
+
+``CompileReport`` and ``initialization_packets`` moved to
+:mod:`repro.core.passes`; they are re-exported here unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 
-import numpy as np
-
-from repro.core import baselines as _baselines
-from repro.core.cost import ResourceReport, resources
+from repro.core import program as _program
 from repro.core.graph import SNNGraph, from_quantized
 from repro.core.memory_model import HardwareConfig
-from repro.core.partition import PartitionResult, partition
-from repro.core.schedule import NOP, OpTables, schedule, validate_schedule
+from repro.core.partition import PartitionResult
+from repro.core.passes import (CompileReport,  # noqa: F401 (re-export)
+                               initialization_packets)
+from repro.core.schedule import OpTables
 from repro.snn.quantize import QuantizedSNN
-
-
-@dataclasses.dataclass
-class CompileReport:
-    method: str
-    feasible: bool
-    iterations: int
-    perturbations: int
-    ot_depth: int
-    scores: np.ndarray
-    spu_synapse_counts: np.ndarray
-    spu_post_counts: np.ndarray          # post-neurons stored per SPU
-    spu_weight_counts: np.ndarray        # unique weights per SPU
-    resources: ResourceReport
-    n_init_packets: int
-    compile_seconds: float
-
-
-def _spu_stats(g: SNNGraph, assign: np.ndarray, m: int):
-    syn = np.bincount(assign, minlength=m)
-    posts = np.zeros(m, np.int64)
-    weights = np.zeros(m, np.int64)
-    for i in range(m):
-        sel = assign == i
-        posts[i] = len(np.unique(g.post[sel]))
-        weights[i] = len(np.unique(g.weight[sel]))
-    return syn, posts, weights
-
-
-def initialization_packets(g: SNNGraph, tables: OpTables,
-                           hw: HardwareConfig) -> list[tuple[int, int]]:
-    """MC-tree initialization stream (paper §4.3, Table 1).
-
-    ctrl=10 selects a unit; ctrl=11 carries its data words. Returns the
-    abstract (ctrl, payload) list — its length drives init latency.
-    """
-    pkts: list[tuple[int, int]] = []
-    m = tables.n_spus
-    # routing bitstrings (unit id 0 = Routing Unit)
-    pkts.append((0b10, 0))
-    for q in range(g.n_neurons):
-        bits = 0
-        for i in range(m):
-            if (tables.assign[g.pre == q] == i).any():
-                bits |= 1 << i
-        pkts.append((0b11, bits))
-    # per-SPU operation tables + unified memories (unit ids 1..M)
-    for i in range(m):
-        pkts.append((0b10, 1 + i))
-        for t in range(tables.depth):
-            pkts.append((0b11, int(tables.pre[i, t])))
-        used_w = np.unique(tables.weight[i][tables.pre[i] != NOP])
-        for w in used_w:
-            pkts.append((0b11, int(w)))
-    # neuron unit (unit id M+1): global index + flags per internal neuron
-    pkts.append((0b10, 1 + m))
-    for q in range(g.n_inputs, g.n_neurons):
-        pkts.append((0b11, q))
-    return pkts
 
 
 def compile_snn(g: SNNGraph, hw: HardwareConfig, method: str = "framework",
                 seed: int = 0, validate: bool = True,
                 max_iters: int = 20000, restarts: int = 1
                 ) -> tuple[OpTables, CompileReport, PartitionResult]:
-    t0 = time.time()
-    if method == "framework":
-        part = None
-        for k in range(max(restarts, 1)):
-            cand = partition(g, hw, seed=seed + k, max_iters=max_iters)
-            if part is None or cand.scores.min() > part.scores.min():
-                part = cand
-            if part.feasible:
-                break
-    elif method in _baselines.BASELINES:
-        part = _baselines.BASELINES[method](g, hw)
-    else:
-        raise ValueError(f"unknown method {method!r}; "
-                         f"use 'framework' or {list(_baselines.BASELINES)}")
+    """Deprecated: use :func:`repro.core.program.compile`.
 
-    tables = schedule(g, part.assign, hw)
-    if validate:
-        validate_schedule(g, tables)
-
-    syn, posts, weights = _spu_stats(g, part.assign, hw.n_spus)
-    pkts = initialization_packets(g, tables, hw)
-    report = CompileReport(
-        method=method, feasible=part.feasible, iterations=part.iterations,
-        perturbations=part.perturbations, ot_depth=tables.depth,
-        scores=part.scores, spu_synapse_counts=syn, spu_post_counts=posts,
-        spu_weight_counts=weights, resources=resources(hw, tables.depth),
-        n_init_packets=len(pkts), compile_seconds=time.time() - t0)
-    return tables, report, part
+    Same pipeline, same defaults; returns the artifact's parts as the
+    historical ``(tables, report, part)`` 3-tuple.
+    """
+    warnings.warn(
+        "compile_snn is deprecated; use repro.core.compile(g, hw, ...) and "
+        "the returned Program artifact", DeprecationWarning, stacklevel=2)
+    p = _program.compile(g, hw, method=method, seed=seed, validate=validate,
+                         max_iters=max_iters, restarts=restarts)
+    return p.tables, p.report, p.part
 
 
 def compile_quantized(qsnn: QuantizedSNN, hw: HardwareConfig, **kw):
-    return compile_snn(from_quantized(qsnn), hw, **kw)
+    """Deprecated: ``repro.core.compile`` accepts a QuantizedSNN directly."""
+    warnings.warn(
+        "compile_quantized is deprecated; repro.core.compile accepts a "
+        "QuantizedSNN directly", DeprecationWarning, stacklevel=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return compile_snn(from_quantized(qsnn), hw, **kw)

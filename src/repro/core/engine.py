@@ -14,7 +14,10 @@ Two layers:
 
 ``run_mapped`` is the slow, structure-faithful reference; the compiled
 batched counterpart lives in :mod:`repro.core.engine_jax` and must stay
-bit-exact with it (tests/test_engine_jax.py).
+bit-exact with it (tests/test_engine_jax.py). Both are normally reached
+through the one compiled artifact —
+``repro.core.program.Program.run(ext, engine="python"|"jax"|"oracle")``
+— which gives all three executors a uniform surface.
 
 Hardware semantics (paper §4.2): spikes generated in timestep t-1 are
 distributed at the start of timestep t; external input spikes for timestep
@@ -28,7 +31,7 @@ import numpy as np
 
 from repro.core.graph import SNNGraph
 from repro.core.memory_model import HardwareConfig
-from repro.core.schedule import NOP, OpTables, lower_tables
+from repro.core.schedule import NOP, OpTables
 from repro.snn.lif import lif_step_int
 
 
@@ -36,6 +39,24 @@ def packet_stats(pkt_counts: np.ndarray) -> dict:
     """Per-run stats dict shared by the Python and JAX executors."""
     return {"packet_counts": pkt_counts,
             "mean_packets_per_step": float(pkt_counts.mean())}
+
+
+def oracle_packet_counts(ext_spikes: np.ndarray, spikes: np.ndarray
+                         ) -> np.ndarray:
+    """Per-timestep MC packet counts implied by a dense (oracle) run.
+
+    The distribution phase of timestep t carries one packet per neuron
+    that fired: external inputs of t plus internal spikes of t-1
+    (``run_mapped`` counts exactly this set). Lets the oracle engine of
+    :meth:`repro.core.program.Program.run` report the same stats dict as
+    the mapped executors.
+    """
+    t_steps = ext_spikes.shape[0]
+    pkts = np.zeros(t_steps, np.int64)
+    for t in range(t_steps):
+        prev = np.count_nonzero(spikes[t - 1]) if t else 0
+        pkts[t] = np.count_nonzero(ext_spikes[t]) + prev
+    return pkts
 
 
 # ---------------------------------------------------------------------------
@@ -77,18 +98,24 @@ class MergeAlignmentError(AssertionError):
 
 
 def run_mapped(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
-               check_alignment: bool = True
+               check_alignment: bool = True,
+               routing: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Execute the scheduled program. Returns (spikes, v_final, stats).
 
     stats carries per-timestep packet counts for the cycle model.
+    ``routing`` takes the precomputed MC-tree bitmap (e.g.
+    ``program.lowered.routing``) to skip the O(E log E) re-lowering;
+    built here when omitted.
     """
     m, depth = tables.pre.shape
     t_steps = ext_spikes.shape[0]
     n_int = g.n_internal
 
     # routing bitstrings: bit[i] of neuron q == SPU i holds a synapse from q
-    routing = lower_tables(g, tables).routing
+    if routing is None:
+        routing = np.zeros((g.n_neurons, m), bool)
+        routing[g.pre, tables.assign] = True
 
     spike_mem = np.zeros((m, g.n_neurons), bool)   # per-SPU bitmap SRAM
     partial = np.zeros((m, n_int), np.int64)       # per-SPU partial currents

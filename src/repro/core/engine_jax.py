@@ -28,11 +28,17 @@ property, paper §4.2):
 Outputs therefore match ``run_oracle``/``run_mapped`` bit-exactly, and
 the emitted per-timestep MC packet counts equal ``run_mapped``'s stats,
 so ``CycleModel`` latency/energy reports are unchanged.
+
+Engines are owned by the :class:`repro.core.program.Program` artifact
+(``program.run(ext, engine="jax")`` / ``program.engine()``), which
+builds them lazily from its already-lowered program and reuses them
+across calls; construct :class:`JaxMappedEngine` directly only when
+driving a bare ``OpTables`` outside the artifact API.
 """
 from __future__ import annotations
 
 import functools
-import weakref
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -138,35 +144,27 @@ class JaxMappedEngine:
         return spikes, v, packet_stats(pkts)
 
 
-# -- convenience entry point with engine caching ----------------------------
-
-_ENGINE_CACHE: dict[tuple, JaxMappedEngine] = {}
-
-
-def _cached_engine(g: SNNGraph, tables: OpTables, nu_kernel: bool,
-                   interpret: bool | None) -> JaxMappedEngine:
-    key = (id(g), id(tables), nu_kernel, interpret)
-    eng = _ENGINE_CACHE.get(key)
-    if eng is None:
-        eng = JaxMappedEngine(g, tables, nu_kernel=nu_kernel,
-                              interpret=interpret)
-        _ENGINE_CACHE[key] = eng
-        # ids are only unique while the objects live: evict with them
-        for obj in (g, tables):
-            weakref.finalize(obj, _ENGINE_CACHE.pop, key, None)
-    return eng
-
+# -- deprecated convenience entry point -------------------------------------
 
 def run_mapped_batched(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
                        *, nu_kernel: bool = True,
                        interpret: bool | None = None
                        ) -> tuple[np.ndarray, np.ndarray, dict]:
-    """Drop-in batched counterpart of ``engine.run_mapped``.
+    """Deprecated: use ``Program.run`` (:mod:`repro.core.program`).
 
-    Compiles (and caches, keyed on the live ``g``/``tables`` objects) a
-    :class:`JaxMappedEngine` and runs it; see ``JaxMappedEngine.run``
-    for shapes. Construct the engine directly when managing many
-    programs.
+    Batched counterpart of ``engine.run_mapped``. Builds a fresh
+    :class:`JaxMappedEngine` on every call — the former module-level
+    ``id()``-keyed cache is gone (recycled ids could alias dead
+    programs, and ``interpret=None`` vs its resolved value duplicated
+    engines). Compiled engines are now owned by the ``Program``
+    artifact, which keys them on resolved build options and reuses
+    them across calls; construct one via ``repro.core.compile`` to
+    avoid per-call recompilation.
     """
-    eng = _cached_engine(g, tables, nu_kernel, interpret)
+    warnings.warn(
+        "run_mapped_batched is deprecated and recompiles per call; use "
+        "repro.core.compile(...).run(ext, engine='jax')",
+        DeprecationWarning, stacklevel=2)
+    eng = JaxMappedEngine(g, tables, nu_kernel=nu_kernel,
+                          interpret=interpret)
     return eng.run(ext_spikes)

@@ -1,0 +1,161 @@
+"""The compile pipeline as explicit, individually-testable passes.
+
+The paper's Fig. 8 software framework is one pipeline::
+
+    partition -> schedule -> validate -> lower
+
+Each stage is a named pass here; :func:`repro.core.program.compile`
+assembles them into the :class:`repro.core.program.Program` artifact.
+Calling a pass directly is supported (e.g. re-schedule a hand-edited
+assignment, or lower baselines for comparison) — every pass is a pure
+function of its inputs.
+
+This module also owns :class:`CompileReport` (the pipeline's summary)
+and :func:`initialization_packets` (the MC-tree configuration stream a
+deployed artifact is initialized from), both formerly in
+``repro.core.compiler``, which now only hosts deprecated wrappers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import baselines as _baselines
+from repro.core.cost import ResourceReport, resources
+from repro.core.graph import SNNGraph
+from repro.core.memory_model import HardwareConfig
+from repro.core.partition import PartitionResult, partition
+from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
+                                 schedule, validate_schedule)
+
+
+@dataclasses.dataclass
+class CompileReport:
+    """Summary of one compile-pipeline run (paper Fig. 8 outputs)."""
+    method: str
+    feasible: bool
+    iterations: int
+    perturbations: int
+    ot_depth: int
+    scores: np.ndarray
+    spu_synapse_counts: np.ndarray
+    spu_post_counts: np.ndarray          # post-neurons stored per SPU
+    spu_weight_counts: np.ndarray        # unique weights per SPU
+    resources: ResourceReport
+    n_init_packets: int
+    compile_seconds: float
+
+
+# ---------------------------------------------------------------------------
+# Passes.
+# ---------------------------------------------------------------------------
+
+def partition_pass(g: SNNGraph, hw: HardwareConfig, *,
+                   method: str = "framework", seed: int = 0,
+                   max_iters: int = 20000, restarts: int = 1
+                   ) -> PartitionResult:
+    """Synapse -> SPU assignment (paper §6.2, or a round-robin baseline).
+
+    ``method='framework'`` runs the probabilistic partitioner with up to
+    ``restarts`` seeds, keeping the best worst-SPU score; any key of
+    :data:`repro.core.baselines.BASELINES` selects that baseline.
+    """
+    if method == "framework":
+        part = None
+        for k in range(max(restarts, 1)):
+            cand = partition(g, hw, seed=seed + k, max_iters=max_iters)
+            if part is None or cand.scores.min() > part.scores.min():
+                part = cand
+            if part.feasible:
+                break
+        return part
+    if method in _baselines.BASELINES:
+        return _baselines.BASELINES[method](g, hw)
+    raise ValueError(f"unknown method {method!r}; "
+                     f"use 'framework' or {list(_baselines.BASELINES)}")
+
+
+def schedule_pass(g: SNNGraph, part: PartitionResult | np.ndarray,
+                  hw: HardwareConfig) -> OpTables:
+    """Heuristic scheduling (paper §6.3) of an assignment into OpTables."""
+    assign = part.assign if isinstance(part, PartitionResult) else part
+    return schedule(g, assign, hw)
+
+
+def validate_pass(g: SNNGraph, tables: OpTables) -> None:
+    """Schedule legality checks; raises AssertionError on violation."""
+    validate_schedule(g, tables)
+
+
+def lower_pass(g: SNNGraph, tables: OpTables) -> LoweredProgram:
+    """Lower OpTables to the dense slot-major program the executors run."""
+    return lower_tables(g, tables)
+
+
+def _spu_stats(g: SNNGraph, assign: np.ndarray, m: int):
+    syn = np.bincount(assign, minlength=m)
+    posts = np.zeros(m, np.int64)
+    weights = np.zeros(m, np.int64)
+    for i in range(m):
+        sel = assign == i
+        posts[i] = len(np.unique(g.post[sel]))
+        weights[i] = len(np.unique(g.weight[sel]))
+    return syn, posts, weights
+
+
+def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
+                 part: PartitionResult, *, method: str,
+                 compile_seconds: float,
+                 routing: np.ndarray | None = None) -> CompileReport:
+    """Assemble the :class:`CompileReport` for a finished pipeline run."""
+    syn, posts, weights = _spu_stats(g, part.assign, hw.n_spus)
+    pkts = initialization_packets(g, tables, hw, routing=routing)
+    return CompileReport(
+        method=method, feasible=part.feasible, iterations=part.iterations,
+        perturbations=part.perturbations, ot_depth=tables.depth,
+        scores=part.scores, spu_synapse_counts=syn, spu_post_counts=posts,
+        spu_weight_counts=weights, resources=resources(hw, tables.depth),
+        n_init_packets=len(pkts), compile_seconds=compile_seconds)
+
+
+# ---------------------------------------------------------------------------
+# Initialization stream of the compiled artifact.
+# ---------------------------------------------------------------------------
+
+def initialization_packets(g: SNNGraph, tables: OpTables,
+                           hw: HardwareConfig,
+                           routing: np.ndarray | None = None
+                           ) -> list[tuple[int, int]]:
+    """MC-tree initialization stream (paper §4.3, Table 1).
+
+    ctrl=10 selects a unit; ctrl=11 carries its data words. Returns the
+    abstract (ctrl, payload) list — its length drives init latency.
+    ``routing`` takes the precomputed [n_neurons, n_spus] bitmap (e.g.
+    ``lowered.routing``); built vectorized here when omitted.
+    """
+    pkts: list[tuple[int, int]] = []
+    m = tables.n_spus
+    if routing is None:
+        routing = np.zeros((g.n_neurons, m), bool)
+        routing[g.pre, tables.assign] = True
+    # routing bitstrings (unit id 0 = Routing Unit)
+    pkts.append((0b10, 0))
+    for q in range(g.n_neurons):
+        bits = 0
+        for i in np.flatnonzero(routing[q]).tolist():
+            bits |= 1 << i
+        pkts.append((0b11, bits))
+    # per-SPU operation tables + unified memories (unit ids 1..M)
+    for i in range(m):
+        pkts.append((0b10, 1 + i))
+        for t in range(tables.depth):
+            pkts.append((0b11, int(tables.pre[i, t])))
+        used_w = np.unique(tables.weight[i][tables.pre[i] != NOP])
+        for w in used_w:
+            pkts.append((0b11, int(w)))
+    # neuron unit (unit id M+1): global index + flags per internal neuron
+    pkts.append((0b10, 1 + m))
+    for q in range(g.n_inputs, g.n_neurons):
+        pkts.append((0b11, q))
+    return pkts

@@ -1,0 +1,383 @@
+"""The compiled SupraSNN deployment artifact.
+
+:func:`compile` runs the explicit pass pipeline of
+:mod:`repro.core.passes` (partition -> schedule -> validate -> lower)
+and returns a :class:`Program`: ONE object owning the graph, the
+scheduled :class:`~repro.core.schedule.OpTables`, the dense
+:class:`~repro.core.schedule.LoweredProgram`, the
+:class:`~repro.core.passes.CompileReport`, and the
+:class:`~repro.core.partition.PartitionResult`. Everything the rest of
+the repo needs hangs off that artifact:
+
+* ``program.run(ext, engine="jax"|"python"|"oracle")`` — uniform
+  ``[T, n_inputs]`` / ``[B, T, n_inputs]`` input shapes and a uniform
+  ``(spikes, v_final, stats)`` return across all three executors;
+* ``program.profile(stats)`` — CycleModel latency + energy and the
+  FPGA resource report in one :class:`ProfileReport`;
+* ``program.init_packets()`` — the MC-tree configuration stream;
+* ``program.save(path)`` / ``Program.load(path)`` — a version-stamped
+  npz artifact (JSON header + dense arrays) that round-trips
+  bit-exactly, so serving processes NEVER re-run the stochastic
+  partitioner.
+
+JAX engines are owned, lazily-built members of the artifact, keyed on
+their *resolved* build options — there is no module-level engine cache
+(the old ``id()``-keyed one could alias recycled ids and duplicated
+engines for ``interpret=None`` vs its resolved value).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cost import ResourceReport
+from repro.core.engine import (CycleModel, CycleReport, PowerModel,
+                               oracle_packet_counts, packet_stats,
+                               run_mapped, run_oracle)
+from repro.core.engine_jax import JaxMappedEngine
+from repro.core.graph import SNNGraph, from_quantized
+from repro.core.memory_model import HardwareConfig
+from repro.core.partition import PartitionResult
+from repro.core.passes import (CompileReport, build_report,
+                               initialization_packets, lower_pass,
+                               partition_pass, schedule_pass, validate_pass)
+from repro.core.schedule import LoweredProgram, OpTables
+from repro.kernels.ops import _default_interpret
+from repro.snn.quantize import QuantizedSNN
+
+PROGRAM_FORMAT = "suprasnn-program"
+PROGRAM_FORMAT_VERSION = 1
+
+ENGINES = ("jax", "python", "oracle")
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    """One-call profile of a run: timing/energy + hardware resources.
+
+    ``per_sample`` holds one :class:`CycleReport` per batch sample;
+    ``cycle`` aggregates them (mean over the batch; equal to
+    ``per_sample[0]`` for unbatched runs). The scalar properties
+    delegate to the aggregate.
+    """
+    cycle: CycleReport
+    resources: ResourceReport
+    per_sample: list[CycleReport]
+
+    @property
+    def latency_us(self) -> float:
+        return self.cycle.latency_us
+
+    @property
+    def power_w(self) -> float:
+        return self.cycle.power_w
+
+    @property
+    def energy_mj(self) -> float:
+        return self.cycle.energy_mj
+
+    @property
+    def energy_per_synapse_nj(self) -> float:
+        return self.cycle.energy_per_synapse_nj
+
+
+def _aggregate_cycles(reports: list[CycleReport]) -> CycleReport:
+    if len(reports) == 1:
+        return reports[0]
+
+    def mean(f):
+        return float(np.mean([getattr(r, f) for r in reports]))
+
+    return CycleReport(
+        cycles_total=int(round(mean("cycles_total"))),
+        cycles_distribution=int(round(mean("cycles_distribution"))),
+        cycles_synaptic=int(round(mean("cycles_synaptic"))),
+        cycles_overhead=int(round(mean("cycles_overhead"))),
+        latency_us=mean("latency_us"), power_w=reports[0].power_w,
+        energy_mj=mean("energy_mj"),
+        energy_per_synapse_nj=mean("energy_per_synapse_nj"))
+
+
+@dataclasses.dataclass
+class Program:
+    """A compiled, runnable, persistable SupraSNN deployment artifact."""
+    graph: SNNGraph
+    hw: HardwareConfig
+    tables: OpTables
+    lowered: LoweredProgram
+    report: CompileReport
+    part: PartitionResult
+    default_engine: str = "jax"
+    _engines: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
+
+    # -- summary properties -------------------------------------------------
+
+    @property
+    def feasible(self) -> bool:
+        return self.report.feasible
+
+    @property
+    def ot_depth(self) -> int:
+        return self.tables.depth
+
+    @property
+    def n_inputs(self) -> int:
+        return self.graph.n_inputs
+
+    @property
+    def n_synapses(self) -> int:
+        return self.graph.n_synapses
+
+    # -- engines ------------------------------------------------------------
+
+    def engine(self, *, nu_kernel: bool = True,
+               interpret: bool | None = None) -> JaxMappedEngine:
+        """The owned compiled executor for these build options.
+
+        ``interpret=None`` resolves to the platform default BEFORE
+        keying, so explicit and default values share one engine.
+        Engines build lazily from the already-lowered program and live
+        as long as the artifact.
+        """
+        key = (bool(nu_kernel),
+               _default_interpret() if interpret is None else bool(interpret))
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = JaxMappedEngine(self.graph, self.lowered,
+                                  nu_kernel=key[0], interpret=key[1])
+            self._engines[key] = eng
+        return eng
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, ext_spikes: np.ndarray, *, engine: str | None = None,
+            nu_kernel: bool = True, interpret: bool | None = None
+            ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Execute the program on a spike train (batch).
+
+        ext_spikes: binary ``[T, n_inputs]`` or ``[B, T, n_inputs]``.
+        engine: ``"jax"`` (compiled batched), ``"python"`` (per-op
+        reference executor), or ``"oracle"`` (dense integer LIF);
+        defaults to ``self.default_engine``. All three return
+        ``(spikes, v_final, stats)`` with matching shapes —
+        ``[T, n_internal]`` / ``[n_internal]`` / packet_counts ``[T]``,
+        batched with a leading ``B`` — and identical bits.
+        """
+        engine = engine or self.default_engine
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; use one of "
+                             f"{ENGINES}")
+        ext = np.asarray(ext_spikes)
+        squeeze = ext.ndim == 2
+        if squeeze:
+            ext = ext[None]
+        if ext.ndim != 3 or ext.shape[2] != self.graph.n_inputs:
+            raise ValueError(f"ext_spikes shape {np.shape(ext_spikes)} != "
+                             f"[B, T, {self.graph.n_inputs}] or "
+                             f"[T, {self.graph.n_inputs}]")
+
+        if engine == "jax":
+            return self.engine(nu_kernel=nu_kernel, interpret=interpret) \
+                .run(ext_spikes)
+
+        spikes, vs, pkts = [], [], []
+        for b in range(ext.shape[0]):
+            e = ext[b].astype(np.int32)
+            if engine == "python":
+                s, v, st = run_mapped(self.graph, self.tables, e,
+                                      routing=self.lowered.routing)
+                p = st["packet_counts"]
+            else:
+                s, v = run_oracle(self.graph, e)
+                p = oracle_packet_counts(e, s)
+            spikes.append(s)
+            vs.append(v)
+            pkts.append(p)
+        s_all = np.stack(spikes)
+        v_all = np.stack(vs)
+        p_all = np.stack(pkts)
+        if squeeze:
+            s_all, v_all, p_all = s_all[0], v_all[0], p_all[0]
+        return s_all, v_all, packet_stats(p_all)
+
+    # -- profiling ----------------------------------------------------------
+
+    def profile(self, stats: dict | np.ndarray, *,
+                n_synapses: int | None = None,
+                power: PowerModel | None = None) -> ProfileReport:
+        """CycleModel timing/energy + resource report in one call.
+
+        ``stats`` is the dict returned by :meth:`run` (or a raw
+        packet-counts array, ``[T]`` or ``[B, T]``). ``n_synapses``
+        overrides the energy-per-synapse denominator (e.g. the
+        pre-pruning synapse count of a quantized model); defaults to
+        the mapped graph's nonzero synapses.
+        """
+        pkts = stats["packet_counts"] if isinstance(stats, dict) else stats
+        pkts = np.atleast_2d(np.asarray(pkts))
+        n_syn = self.graph.n_synapses if n_synapses is None else n_synapses
+        cm = CycleModel(self.hw, power)
+        per = [cm.run(row, self.tables.depth, n_syn) for row in pkts]
+        return ProfileReport(cycle=_aggregate_cycles(per),
+                             resources=self.report.resources,
+                             per_sample=per)
+
+    # -- initialization stream ----------------------------------------------
+
+    def init_packets(self) -> list[tuple[int, int]]:
+        """The MC-tree (ctrl, payload) configuration stream (§4.3)."""
+        return initialization_packets(self.graph, self.tables, self.hw,
+                                      routing=self.lowered.routing)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str | Path) -> Path:
+        """Persist the artifact as npz (JSON header + dense arrays).
+
+        Returns the actual file path (``.npz`` appended if missing).
+        ``Program.load(path)`` round-trips bit-exactly — the lowered
+        program is re-derived deterministically; the partitioner is
+        NOT re-run.
+        """
+        path = Path(path)
+        if path.suffix != ".npz":
+            path = path.with_name(path.name + ".npz")
+        g, hw, rep, part = self.graph, self.hw, self.report, self.part
+        res = rep.resources
+        header = {
+            "format": PROGRAM_FORMAT,
+            "version": PROGRAM_FORMAT_VERSION,
+            "default_engine": self.default_engine,
+            "graph": {
+                "n_inputs": int(g.n_inputs),
+                "n_neurons": int(g.n_neurons),
+                "output_slice": [int(g.output_slice[0]),
+                                 int(g.output_slice[1])],
+                "lif": {"leak_shift": int(g.lif.leak_shift),
+                        "v_threshold": int(g.lif.v_threshold),
+                        "v_reset": int(g.lif.v_reset)},
+            },
+            "hw": {f.name: getattr(hw, f.name)
+                   for f in dataclasses.fields(hw)},
+            "report": {
+                "method": rep.method,
+                "feasible": bool(rep.feasible),
+                "iterations": int(rep.iterations),
+                "perturbations": int(rep.perturbations),
+                "ot_depth": int(rep.ot_depth),
+                "n_init_packets": int(rep.n_init_packets),
+                "compile_seconds": float(rep.compile_seconds),
+                "resources": {"luts": int(res.luts), "ffs": int(res.ffs),
+                              "brams": float(res.brams),
+                              "memory_kb": float(res.memory_kb)},
+            },
+            "part": {
+                "feasible": bool(part.feasible),
+                "iterations": int(part.iterations),
+                "perturbations": int(part.perturbations),
+            },
+        }
+        np.savez_compressed(
+            path,
+            header=np.asarray(json.dumps(header)),
+            g_pre=g.pre, g_post=g.post, g_weight=g.weight,
+            t_pre=self.tables.pre, t_post=self.tables.post,
+            t_weight=self.tables.weight, t_pre_end=self.tables.pre_end,
+            t_post_end=self.tables.post_end, t_assign=self.tables.assign,
+            part_assign=part.assign, part_scores=part.scores,
+            part_history=np.asarray(part.score_history, np.float64),
+            rep_scores=rep.scores,
+            rep_spu_synapse_counts=rep.spu_synapse_counts,
+            rep_spu_post_counts=rep.spu_post_counts,
+            rep_spu_weight_counts=rep.spu_weight_counts)
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Program":
+        """Load a saved artifact; rejects unknown formats/versions."""
+        with np.load(path) as z:
+            if "header" not in z.files:
+                raise ValueError(f"{path}: not a {PROGRAM_FORMAT} artifact")
+            header = json.loads(str(z["header"][()]))
+            if header.get("format") != PROGRAM_FORMAT:
+                raise ValueError(
+                    f"{path}: format {header.get('format')!r} != "
+                    f"{PROGRAM_FORMAT!r}")
+            if header.get("version") != PROGRAM_FORMAT_VERSION:
+                raise ValueError(
+                    f"{path}: format version {header.get('version')} "
+                    f"unsupported (have {PROGRAM_FORMAT_VERSION})")
+            arrays = {k: z[k] for k in z.files if k != "header"}
+
+        from repro.snn.lif import LIFIntParams
+        gh = header["graph"]
+        g = SNNGraph(
+            n_inputs=gh["n_inputs"], n_neurons=gh["n_neurons"],
+            pre=arrays["g_pre"], post=arrays["g_post"],
+            weight=arrays["g_weight"],
+            lif=LIFIntParams(**gh["lif"]),
+            output_slice=tuple(gh["output_slice"]))
+        hw = HardwareConfig(**header["hw"])
+        tables = OpTables.from_dense(
+            arrays["t_pre"], arrays["t_post"], arrays["t_weight"],
+            arrays["t_pre_end"], arrays["t_post_end"], arrays["t_assign"])
+        ph = header["part"]
+        part = PartitionResult(
+            assign=arrays["part_assign"], scores=arrays["part_scores"],
+            feasible=ph["feasible"], iterations=ph["iterations"],
+            perturbations=ph["perturbations"],
+            score_history=arrays["part_history"].tolist())
+        rh = header["report"]
+        report = CompileReport(
+            method=rh["method"], feasible=rh["feasible"],
+            iterations=rh["iterations"], perturbations=rh["perturbations"],
+            ot_depth=rh["ot_depth"], scores=arrays["rep_scores"],
+            spu_synapse_counts=arrays["rep_spu_synapse_counts"],
+            spu_post_counts=arrays["rep_spu_post_counts"],
+            spu_weight_counts=arrays["rep_spu_weight_counts"],
+            resources=ResourceReport(**rh["resources"]),
+            n_init_packets=rh["n_init_packets"],
+            compile_seconds=rh["compile_seconds"])
+        # re-lower (pure, deterministic) — never re-partition
+        lowered = lower_pass(g, tables)
+        return cls(g, hw, tables, lowered, report, part,
+                   default_engine=header.get("default_engine", "jax"))
+
+
+# ---------------------------------------------------------------------------
+# The compile entry point.
+# ---------------------------------------------------------------------------
+
+def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
+            method: str = "framework", engine: str = "jax", seed: int = 0,
+            validate: bool = True, max_iters: int = 20000,
+            restarts: int = 1) -> Program:
+    """Compile an SNN (graph or quantized model) into a :class:`Program`.
+
+    Runs the explicit pipeline partition -> schedule -> [validate] ->
+    lower (see :mod:`repro.core.passes`) and wraps every product in the
+    artifact. ``engine`` picks the default executor of
+    :meth:`Program.run`; ``method``/``seed``/``max_iters``/``restarts``
+    parameterize the partitioning pass.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
+    t0 = time.time()
+    g = (from_quantized(g_or_qsnn) if isinstance(g_or_qsnn, QuantizedSNN)
+         else g_or_qsnn)
+    part = partition_pass(g, hw, method=method, seed=seed,
+                          max_iters=max_iters, restarts=restarts)
+    tables = schedule_pass(g, part, hw)
+    if validate:
+        validate_pass(g, tables)
+    lowered = lower_pass(g, tables)
+    report = build_report(g, hw, tables, part, method=method,
+                          compile_seconds=time.time() - t0,
+                          routing=lowered.routing)
+    return Program(g, hw, tables, lowered, report, part,
+                   default_engine=engine)

@@ -53,6 +53,25 @@ class OpTables:
     def n_spus(self) -> int:
         return self.pre.shape[0]
 
+    @classmethod
+    def from_dense(cls, pre: np.ndarray, post: np.ndarray, weight: np.ndarray,
+                   pre_end: np.ndarray, post_end: np.ndarray,
+                   assign: np.ndarray) -> "OpTables":
+        """Rebuild OpTables from the dense arrays alone.
+
+        ``send_slot``/``send_order`` are derived, not stored: every
+        Post-End op of post p sits in p's send slot (validate_schedule
+        invariant b), so the flags fully determine both. Used by
+        :meth:`repro.core.program.Program.load` to round-trip an
+        artifact without serializing Python containers.
+        """
+        spus, slots = np.nonzero(post_end)
+        send_slot = {int(p): int(t)
+                     for p, t in zip(post[spus, slots], slots)}
+        send_order = sorted(send_slot, key=send_slot.__getitem__)
+        return cls(int(pre.shape[1]), pre, post, weight, pre_end, post_end,
+                   send_slot, send_order, assign)
+
 
 def schedule(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig) -> OpTables:
     m = hw.n_spus

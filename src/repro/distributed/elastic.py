@@ -15,7 +15,6 @@ is purely a placement decision — no data transformation is ever needed.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -35,7 +35,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              unroll_decode: bool = False,
              verbose: bool = True) -> dict:
     import jax
-    import jax.numpy as jnp
     from repro.configs import SHAPES, applicable, get_config
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import batch_specs, decode_specs, model_specs

@@ -17,8 +17,6 @@ Two execution paths, like rwkv.py:
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

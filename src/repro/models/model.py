@@ -26,8 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

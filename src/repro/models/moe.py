@@ -32,7 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig
+from repro.configs.base import ArchConfig
 from repro.models.layers import Params, _dense_init
 
 

@@ -17,9 +17,6 @@ Two execution paths:
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterator
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

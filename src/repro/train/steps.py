@@ -21,7 +21,6 @@ n_micro (napkin math per arch in EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

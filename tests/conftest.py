@@ -1,5 +1,33 @@
-import pytest
+import numpy as np
+
+from repro.core import HardwareConfig, random_graph
+from repro.core.graph import SNNGraph
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+# -- shared graph/hardware fixtures (test_engine_jax, test_program) ---------
+
+def make_hw(g, m=4, k=2):
+    """A comfortably-feasible HardwareConfig for graph ``g``."""
+    return HardwareConfig(
+        n_spus=m, unified_mem_depth=4 * (g.n_synapses // m + g.n_internal),
+        concentration=k, max_neurons=g.n_neurons,
+        max_post_neurons=g.n_internal)
+
+
+def make_feedforward(n_inputs=16, n_internal=12, n_synapses=150, seed=5):
+    """Random graph restricted to input->internal synapses only."""
+    g = random_graph(n_inputs, n_internal, n_synapses, seed=seed)
+    ff = g.pre < n_inputs
+    assert ff.sum() >= 8
+    return SNNGraph(g.n_inputs, g.n_neurons, g.pre[ff], g.post[ff],
+                    g.weight[ff], g.lif, g.output_slice)
+
+
+def make_ext(g, b, t, rate=0.3, seed=0):
+    """Binary [B, T, n_inputs] spike train for graph ``g``."""
+    rng = np.random.default_rng(seed)
+    return (rng.random((b, t, g.n_inputs)) < rate).astype(np.int32)

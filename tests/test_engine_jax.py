@@ -8,32 +8,15 @@ must equal ``run_mapped``'s stats so CycleModel reports are unchanged.
 import numpy as np
 import pytest
 
+from conftest import make_ext, make_feedforward, make_hw
 from repro.configs.snn_paper import mnist_scale_random_graph
-from repro.core import (HardwareConfig, JaxMappedEngine, compile_snn,
-                        lower_tables, random_graph, run_mapped,
-                        run_mapped_batched, run_oracle)
-from repro.core.graph import SNNGraph
+from repro.core import compile as program_compile
+from repro.core import (JaxMappedEngine, compile_snn, lower_tables,
+                        random_graph, run_mapped, run_mapped_batched,
+                        run_oracle)
 
 
-def _hw(g, m=4, k=2):
-    return HardwareConfig(
-        n_spus=m, unified_mem_depth=4 * (g.n_synapses // m + g.n_internal),
-        concentration=k, max_neurons=g.n_neurons,
-        max_post_neurons=g.n_internal)
-
-
-def _feedforward(n_inputs=16, n_internal=12, n_synapses=150, seed=5):
-    """Random graph restricted to input->internal synapses only."""
-    g = random_graph(n_inputs, n_internal, n_synapses, seed=seed)
-    ff = g.pre < n_inputs
-    assert ff.sum() >= 8
-    return SNNGraph(g.n_inputs, g.n_neurons, g.pre[ff], g.post[ff],
-                    g.weight[ff], g.lif, g.output_slice)
-
-
-def _ext(g, b, t, rate=0.3, seed=0):
-    rng = np.random.default_rng(seed)
-    return (rng.random((b, t, g.n_inputs)) < rate).astype(np.int32)
+_hw, _feedforward, _ext = make_hw, make_feedforward, make_ext
 
 
 @pytest.mark.parametrize("nu_kernel", [True, False],
@@ -104,19 +87,22 @@ def test_mnist_scale_graph_bit_exact():
                                   ref["packet_counts"])
 
 
-def test_engine_reuse_and_cache():
+def test_engine_reuse_and_ownership():
     g = random_graph(8, 10, 60, seed=11)
     tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
     eng = JaxMappedEngine(g, tables)
     a = eng.run(_ext(g, 2, 5, seed=1))
     b = eng.run(_ext(g, 2, 5, seed=1))          # same input, same engine
     np.testing.assert_array_equal(a[0], b[0])
+    # engines are owned by the Program artifact now; the fragile
+    # id()-keyed module cache is gone and the wrapper warns
     from repro.core import engine_jax
-    n0 = len(engine_jax._ENGINE_CACHE)
-    run_mapped_batched(g, tables, _ext(g, 2, 5, seed=1))
-    n1 = len(engine_jax._ENGINE_CACHE)
-    run_mapped_batched(g, tables, _ext(g, 3, 7, seed=2))  # new shape, same prog
-    assert len(engine_jax._ENGINE_CACHE) == n1 == n0 + 1
+    assert not hasattr(engine_jax, "_ENGINE_CACHE")
+    with pytest.deprecated_call():
+        c = run_mapped_batched(g, tables, _ext(g, 2, 5, seed=1))
+    np.testing.assert_array_equal(a[0], c[0])
+    prog = program_compile(g, _hw(g), max_iters=4000)
+    assert prog.engine() is prog.engine()       # reused across run() calls
 
 
 def test_lower_tables_covers_all_synapses():

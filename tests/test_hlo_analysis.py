@@ -3,7 +3,6 @@ collective accounting (launch/hlo_analysis.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import analyze
 

@@ -4,7 +4,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import (BASELINES, HardwareConfig, OpTables, partition,
+from repro.core import (BASELINES, HardwareConfig, partition,
                         random_graph, schedule, scores_from_assignment,
                         spu_score, spu_usage, validate_schedule)
 from repro.core.memory_model import bram_count, total_memory_kb

@@ -101,7 +101,6 @@ def test_chunked_attention_matches_dense():
 
 def test_gqa_grouped_decode_matches_dense():
     """The grouped-einsum decode path (no KV repeat) == dense GQA."""
-    import dataclasses
     from repro.configs import get_reduced
     from repro.models.layers import attention, init_attention
     cfg = get_reduced("glm4-9b")

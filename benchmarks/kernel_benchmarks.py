@@ -74,7 +74,11 @@ def engine_speedup(quick: bool = False, batch: int = 16) -> list[tuple]:
          f"measured on {n_ref} image(s)"),
         (f"engine.jax.speedup_batch{batch}", py_batch_s / jax_s,
          "acceptance: >= 20x"),
+        ("engine.jax.tokens_per_s", batch * t_steps / jax_s,
+         "timestep-frames per second, whole batch"),
         ("engine.jax.bit_exact_vs_oracle", float(exact), ""),
+        ("compile.seconds", program.report.compile_seconds, ""),
+        ("compile.ot_depth", program.report.ot_depth, ""),
     ]
 
 

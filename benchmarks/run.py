@@ -1,13 +1,20 @@
 """Benchmark runner: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13]
+                                            [--json out.json]
 
 Prints ``name,value,derived`` CSV rows per benchmark plus wall time.
+``--smoke`` runs the CI subset in quick mode and (unless overridden
+with ``--json``) writes every row to ``BENCH_smoke.json`` so the perf
+trajectory — compile seconds, OT depth, engine tokens/s, partitioner
+speedup — is captured as a CI artifact per commit.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import platform
 import sys
 import time
 import traceback
@@ -19,11 +26,13 @@ MODULES = [
     "benchmarks.fig13_partitioning",      # Fig 13
     "benchmarks.fig14_15_balance_reuse",  # Fig 14 + 15
     "benchmarks.kernel_benchmarks",       # Pallas kernel structure
+    "benchmarks.partitioner_throughput",  # mapping-subsystem speedup
     "benchmarks.roofline_table",          # §Roofline aggregation
 ]
 
 
-SMOKE_MODULES = ["benchmarks.kernel_benchmarks"]
+SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
+                 "benchmarks.partitioner_throughput"]
 
 
 def main() -> None:
@@ -31,15 +40,22 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke run: kernel/executor benchmarks only, "
-                         "quick mode")
+                    help="CI smoke run: kernel/executor + partitioner "
+                         "benchmarks only, quick mode, JSON artifact")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows to PATH as JSON "
+                         "(default BENCH_smoke.json under --smoke)")
     args = ap.parse_args()
     modules = MODULES
     if args.smoke:
         args.quick = True
         modules = SMOKE_MODULES
+        if args.json is None:
+            args.json = "BENCH_smoke.json"
 
     failures = 0
+    all_rows: dict[str, float] = {}
+    timings: dict[str, float] = {}
     for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue
@@ -48,14 +64,36 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             rows = mod.run(quick=args.quick)
             dt = time.time() - t0
+            timings[mod_name] = dt
             print(f"# {mod_name} ({dt:.1f}s)")
             for name, value, derived in rows:
                 print(f"{name},{value},{derived}")
+                try:
+                    all_rows[name] = float(value)
+                except (TypeError, ValueError):
+                    all_rows[name] = value
         except Exception:
             failures += 1
             print(f"# {mod_name} FAILED")
             traceback.print_exc()
         sys.stdout.flush()
+
+    if args.json:
+        payload = {
+            "meta": {
+                "quick": bool(args.quick),
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+                "modules": list(timings),
+                "module_seconds": timings,
+                "failures": failures,
+            },
+            "rows": all_rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json} ({len(all_rows)} rows)")
+
     if failures:
         sys.exit(1)
 

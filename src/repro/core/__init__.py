@@ -1,13 +1,17 @@
 # SupraSNN core: the paper's primary contribution.
 #   graph         SNN-as-graph (Eq. 6)
 #   memory_model  Eqs. (9)-(11)
-#   partition     probabilistic partitioning (§6.2)
+#   mapping/      the mapping search subsystem (§6.2): vectorized
+#                 partitioner core, lockstep restart population, portfolio
+#                 search, strategy registry, legacy parity reference
+#   partition     single-seed compatibility shim over mapping/
 #   baselines     round-robin baselines (§7.4.1)
 #   schedule      heuristic scheduling (§6.3)
 #   engine        functional executor + cycle/energy model (§4, §7)
 #   engine_jax    compiled batched executor (lax.scan + Pallas NU)
 #   cost          FPGA resource model (Table 2 fit)
-#   passes        explicit compile passes (partition/schedule/validate/lower)
+#   passes        explicit compile passes (partition/search/schedule/
+#                 validate/lower)
 #   program       the Program artifact: compile -> run/profile/save/load
 #   compiler      deprecated pre-Program wrappers
 from repro.core.graph import SNNGraph, from_quantized, random_graph
@@ -16,6 +20,10 @@ from repro.core.memory_model import (HardwareConfig, spu_score, spu_usage,
                                      total_memory_bits, total_memory_kb,
                                      bram_count)
 from repro.core.partition import PartitionResult, partition
+from repro.core.mapping import (CandidateTrace, MappingStrategy,
+                                SearchConfig, SearchTrace, STRATEGIES,
+                                framework_partition, get_strategy,
+                                portfolio_search, register_strategy)
 from repro.core.baselines import (BASELINES, post_neuron_round_robin,
                                   synapse_round_robin, weight_round_robin)
 from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
@@ -27,7 +35,8 @@ from repro.core.engine_jax import JaxMappedEngine, run_mapped_batched
 from repro.core.cost import ResourceModel, ResourceReport, resources
 from repro.core.passes import (CompileReport, build_report,
                                initialization_packets, lower_pass,
-                               partition_pass, schedule_pass, validate_pass)
+                               partition_pass, schedule_pass, search_pass,
+                               validate_pass)
 from repro.core.program import (ENGINES, PROGRAM_FORMAT_VERSION, Program,
                                 ProfileReport, compile)
 from repro.core.compiler import compile_snn, compile_quantized
@@ -43,9 +52,13 @@ __all__ = [
     "oracle_packet_counts", "packet_stats", "run_mapped", "run_oracle",
     "JaxMappedEngine", "run_mapped_batched", "ResourceModel", "ResourceReport",
     "resources",
+    # mapping search subsystem
+    "CandidateTrace", "MappingStrategy", "SearchConfig", "SearchTrace",
+    "STRATEGIES", "framework_partition", "get_strategy", "portfolio_search",
+    "register_strategy",
     # pass pipeline + artifact API
     "CompileReport", "build_report", "initialization_packets", "lower_pass",
-    "partition_pass", "schedule_pass", "validate_pass",
+    "partition_pass", "schedule_pass", "search_pass", "validate_pass",
     "ENGINES", "PROGRAM_FORMAT_VERSION", "Program", "ProfileReport",
     "compile",
     # deprecated wrappers

@@ -12,8 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import SNNGraph
+from repro.core.mapping.books import PartitionResult
 from repro.core.memory_model import HardwareConfig, scores_from_assignment
-from repro.core.partition import PartitionResult
 
 
 def _result(g: SNNGraph, hw: HardwareConfig, assign: np.ndarray

@@ -1,0 +1,25 @@
+# SupraSNN mapping search subsystem (paper §6.2) — see DESIGN.md §6.
+#   books       flat numpy occupancy bookkeeping (Eq. 9/10), batched
+#   tree        partitioning-tree walk / path / LCA geometry, batched
+#   search      vectorized restart population + portfolio driver
+#   strategies  the MappingStrategy registry behind compile(method=...)
+#   legacy      the original pure-Python loop, kept as the parity reference
+from repro.core.mapping.books import Books, PartitionResult
+from repro.core.mapping.legacy import partition_legacy
+from repro.core.mapping.search import (CandidateTrace, SearchConfig,
+                                       SearchTrace, framework_partition,
+                                       portfolio_search)
+from repro.core.mapping.strategies import (BaselineStrategy,
+                                           FrameworkStrategy,
+                                           MappingStrategy, STRATEGIES,
+                                           get_strategy, register_strategy)
+from repro.core.mapping.tree import lca_depths, leaf_paths, walk
+
+__all__ = [
+    "Books", "PartitionResult", "partition_legacy",
+    "CandidateTrace", "SearchConfig", "SearchTrace",
+    "framework_partition", "portfolio_search",
+    "BaselineStrategy", "FrameworkStrategy", "MappingStrategy",
+    "STRATEGIES", "get_strategy", "register_strategy",
+    "lca_depths", "leaf_paths", "walk",
+]

@@ -51,14 +51,17 @@ def scores_from_assignment(weights: np.ndarray, posts: np.ndarray,
     m = hw.n_spus
     uq = np.zeros(m, np.int64)
     up = np.zeros(m, np.int64)
-    # unique (spu, weight) and (spu, post) pairs
+    # unique (spu, weight) and (spu, post) pairs; factorizing the values
+    # first keeps the keys dense and makes empty SPUs (and an empty graph)
+    # well-defined — no min/max of the full value array
     for arr, out in ((weights, uq), (posts, up)):
-        key = assign.astype(np.int64) * (int(arr.max()) - int(arr.min()) + 1) \
-            + (arr.astype(np.int64) - int(arr.min()))
-        uniq_spu = np.unique(key) // (int(arr.max()) - int(arr.min()) + 1)
-        np.add.at(out, uniq_spu.astype(np.int64), 1)
+        vals, inv = np.unique(arr, return_inverse=True)
+        if not len(vals):
+            continue
+        pairs = np.unique(assign.astype(np.int64) * len(vals) + inv)
+        np.add.at(out, pairs // len(vals), 1)
     return (hw.unified_mem_depth
-            - (np.ceil((uq + 1) / hw.concentration).astype(np.int64) + up))
+            - (-(-(uq + 1) // hw.concentration) + up))
 
 
 def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:

@@ -21,11 +21,13 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import baselines as _baselines
 from repro.core.cost import ResourceReport, resources
 from repro.core.graph import SNNGraph
+from repro.core.mapping.books import PartitionResult
+from repro.core.mapping.search import (SearchConfig, SearchTrace,
+                                       portfolio_search)
+from repro.core.mapping.strategies import get_strategy
 from repro.core.memory_model import HardwareConfig
-from repro.core.partition import PartitionResult, partition
 from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
                                  schedule, validate_schedule)
 
@@ -45,6 +47,8 @@ class CompileReport:
     resources: ResourceReport
     n_init_packets: int
     compile_seconds: float
+    search: SearchTrace | None = None    # portfolio trace (search= compiles)
+    candidates_tried: int = 1            # mappings evaluated to pick this one
 
 
 # ---------------------------------------------------------------------------
@@ -57,23 +61,28 @@ def partition_pass(g: SNNGraph, hw: HardwareConfig, *,
                    ) -> PartitionResult:
     """Synapse -> SPU assignment (paper §6.2, or a round-robin baseline).
 
-    ``method='framework'`` runs the probabilistic partitioner with up to
-    ``restarts`` seeds, keeping the best worst-SPU score; any key of
-    :data:`repro.core.baselines.BASELINES` selects that baseline.
+    ``method`` names a registered
+    :class:`~repro.core.mapping.strategies.MappingStrategy`:
+    ``'framework'`` is the probabilistic search (vectorized over up to
+    ``restarts`` lockstep seeds, keeping the first feasible / best
+    worst-SPU score); the :data:`repro.core.baselines.BASELINES` keys
+    select those baselines. Unknown names raise ``ValueError`` listing
+    the registry.
     """
-    if method == "framework":
-        part = None
-        for k in range(max(restarts, 1)):
-            cand = partition(g, hw, seed=seed + k, max_iters=max_iters)
-            if part is None or cand.scores.min() > part.scores.min():
-                part = cand
-            if part.feasible:
-                break
-        return part
-    if method in _baselines.BASELINES:
-        return _baselines.BASELINES[method](g, hw)
-    raise ValueError(f"unknown method {method!r}; "
-                     f"use 'framework' or {list(_baselines.BASELINES)}")
+    return get_strategy(method).partition(g, hw, seed=seed,
+                                          max_iters=max_iters,
+                                          restarts=restarts)
+
+
+def search_pass(g: SNNGraph, hw: HardwareConfig,
+                config: SearchConfig | None = None
+                ) -> tuple[PartitionResult, SearchTrace, OpTables | None]:
+    """Portfolio mapping search (``compile(search=...)``): the framework
+    restart population raced against every baseline; returns the best
+    (feasible, min OT depth, min memory) candidate, the per-candidate
+    :class:`~repro.core.mapping.search.SearchTrace`, and the winner's
+    already-scheduled tables (None if infeasible)."""
+    return portfolio_search(g, hw, config)
 
 
 def schedule_pass(g: SNNGraph, part: PartitionResult | np.ndarray,
@@ -107,7 +116,8 @@ def _spu_stats(g: SNNGraph, assign: np.ndarray, m: int):
 def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
                  part: PartitionResult, *, method: str,
                  compile_seconds: float,
-                 routing: np.ndarray | None = None) -> CompileReport:
+                 routing: np.ndarray | None = None,
+                 search: SearchTrace | None = None) -> CompileReport:
     """Assemble the :class:`CompileReport` for a finished pipeline run."""
     syn, posts, weights = _spu_stats(g, part.assign, hw.n_spus)
     pkts = initialization_packets(g, tables, hw, routing=routing)
@@ -116,7 +126,9 @@ def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
         perturbations=part.perturbations, ot_depth=tables.depth,
         scores=part.scores, spu_synapse_counts=syn, spu_post_counts=posts,
         spu_weight_counts=weights, resources=resources(hw, tables.depth),
-        n_init_packets=len(pkts), compile_seconds=compile_seconds)
+        n_init_packets=len(pkts), compile_seconds=compile_seconds,
+        search=search,
+        candidates_tried=len(search.candidates) if search else 1)
 
 
 # ---------------------------------------------------------------------------
@@ -139,13 +151,15 @@ def initialization_packets(g: SNNGraph, tables: OpTables,
     if routing is None:
         routing = np.zeros((g.n_neurons, m), bool)
         routing[g.pre, tables.assign] = True
-    # routing bitstrings (unit id 0 = Routing Unit)
+    # routing bitstrings (unit id 0 = Routing Unit): one packed-bits
+    # matvec per 32-SPU chunk instead of a per-neuron flatnonzero loop
     pkts.append((0b10, 0))
-    for q in range(g.n_neurons):
-        bits = 0
-        for i in np.flatnonzero(routing[q]).tolist():
-            bits |= 1 << i
-        pkts.append((0b11, bits))
+    chunks = [(int(c), routing[:, c:c + 32].astype(np.int64)
+               @ (np.int64(1) << np.arange(min(32, m - c), dtype=np.int64)))
+              for c in range(0, m, 32)]
+    pkts.extend(
+        (0b11, sum(int(word[q]) << shift for shift, word in chunks))
+        for q in range(g.n_neurons))
     # per-SPU operation tables + unified memories (unit ids 1..M)
     for i in range(m):
         pkts.append((0b10, 1 + i))

@@ -41,10 +41,12 @@ from repro.core.engine import (CycleModel, CycleReport, PowerModel,
 from repro.core.engine_jax import JaxMappedEngine
 from repro.core.graph import SNNGraph, from_quantized
 from repro.core.memory_model import HardwareConfig
+from repro.core.mapping.search import SearchConfig, SearchTrace
 from repro.core.partition import PartitionResult
 from repro.core.passes import (CompileReport, build_report,
                                initialization_packets, lower_pass,
-                               partition_pass, schedule_pass, validate_pass)
+                               partition_pass, schedule_pass, search_pass,
+                               validate_pass)
 from repro.core.schedule import LoweredProgram, OpTables
 from repro.kernels.ops import _default_interpret
 from repro.snn.quantize import QuantizedSNN
@@ -275,6 +277,8 @@ class Program:
                 "resources": {"luts": int(res.luts), "ffs": int(res.ffs),
                               "brams": float(res.brams),
                               "memory_kb": float(res.memory_kb)},
+                "search": rep.search.to_json() if rep.search else None,
+                "candidates_tried": int(rep.candidates_tried),
             },
             "part": {
                 "feasible": bool(part.feasible),
@@ -342,7 +346,10 @@ class Program:
             spu_weight_counts=arrays["rep_spu_weight_counts"],
             resources=ResourceReport(**rh["resources"]),
             n_init_packets=rh["n_init_packets"],
-            compile_seconds=rh["compile_seconds"])
+            compile_seconds=rh["compile_seconds"],
+            search=(SearchTrace.from_json(rh["search"])
+                    if rh.get("search") else None),
+            candidates_tried=rh.get("candidates_tried", 1))
         # re-lower (pure, deterministic) — never re-partition
         lowered = lower_pass(g, tables)
         return cls(g, hw, tables, lowered, report, part,
@@ -356,7 +363,8 @@ class Program:
 def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
             method: str = "framework", engine: str = "jax", seed: int = 0,
             validate: bool = True, max_iters: int = 20000,
-            restarts: int = 1) -> Program:
+            restarts: int = 1,
+            search: SearchConfig | None = None) -> Program:
     """Compile an SNN (graph or quantized model) into a :class:`Program`.
 
     Runs the explicit pipeline partition -> schedule -> [validate] ->
@@ -364,20 +372,38 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     artifact. ``engine`` picks the default executor of
     :meth:`Program.run`; ``method``/``seed``/``max_iters``/``restarts``
     parameterize the partitioning pass.
+
+    Passing ``search=SearchConfig(...)`` replaces the single partition
+    pass with the portfolio mapping search (framework restarts raced
+    against every baseline; best feasible candidate by OT depth and
+    memory wins). The per-candidate trace lands on
+    ``program.report.search`` and survives ``save``/``load``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
     t0 = time.time()
     g = (from_quantized(g_or_qsnn) if isinstance(g_or_qsnn, QuantizedSNN)
          else g_or_qsnn)
-    part = partition_pass(g, hw, method=method, seed=seed,
-                          max_iters=max_iters, restarts=restarts)
-    tables = schedule_pass(g, part, hw)
+    trace = None
+    tables = None
+    if search is not None:
+        if (method, seed, max_iters, restarts) != ("framework", 0, 20000, 1):
+            raise ValueError(
+                "search= runs the portfolio and takes its parameters from "
+                "the SearchConfig; pass seed/max_iters/restarts there "
+                "instead of as compile() arguments")
+        part, trace, tables = search_pass(g, hw, search)
+        method = "portfolio"
+    else:
+        part = partition_pass(g, hw, method=method, seed=seed,
+                              max_iters=max_iters, restarts=restarts)
+    if tables is None:
+        tables = schedule_pass(g, part, hw)
     if validate:
         validate_pass(g, tables)
     lowered = lower_pass(g, tables)
     report = build_report(g, hw, tables, part, method=method,
                           compile_seconds=time.time() - t0,
-                          routing=lowered.routing)
+                          routing=lowered.routing, search=trace)
     return Program(g, hw, tables, lowered, report, part,
                    default_engine=engine)

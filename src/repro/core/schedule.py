@@ -232,48 +232,66 @@ def lower_tables(g: SNNGraph, tables: OpTables) -> LoweredProgram:
 
 
 def validate_schedule(g: SNNGraph, tables: OpTables) -> None:
-    """Legality checks (DESIGN.md §7.3): raises AssertionError on violation."""
-    m, depth = tables.pre.shape
+    """Legality checks (DESIGN.md §7.3): raises AssertionError on violation.
+
+    All four invariants are numpy mask/lexsort expressions over the
+    ``[M, depth]`` tables — no Python loop over slots — so validation
+    stays a negligible slice of compile time at large OT depths. The
+    assertion messages are identical to the original loop-based checks.
+    """
+    valid = tables.pre != NOP
+    spu_i, slot_i = np.nonzero(valid)           # row-major: (spu, t) order
+    pre_v = tables.pre[spu_i, slot_i]
+    post_v = tables.post[spu_i, slot_i]
+    w_v = tables.weight[spu_i, slot_i]
+
     # (a) every synapse appears exactly once
-    placed = []
-    for spu in range(m):
-        for t in range(depth):
-            if tables.pre[spu, t] != NOP:
-                placed.append((int(tables.pre[spu, t]),
-                               int(tables.post[spu, t]),
-                               int(tables.weight[spu, t])))
-    assert len(placed) == g.n_synapses, \
-        f"{len(placed)} ops != {g.n_synapses} synapses"
-    want = sorted(zip(g.pre.tolist(), g.post.tolist(), g.weight.tolist()))
-    assert sorted(placed) == want, "op multiset != synapse multiset"
+    n_placed = int(valid.sum())
+    assert n_placed == g.n_synapses, \
+        f"{n_placed} ops != {g.n_synapses} synapses"
+    have = np.lexsort((w_v, post_v, pre_v))
+    want = np.lexsort((g.weight, g.post, g.pre))
+    assert (np.array_equal(pre_v[have], g.pre[want])
+            and np.array_equal(post_v[have], g.post[want])
+            and np.array_equal(w_v[have], g.weight[want])), \
+        "op multiset != synapse multiset"
+
+    # send slot per post as a dense lookup table
+    n = g.n_neurons
+    ss = np.full(n, -1, np.int64)
+    for pq, t in tables.send_slot.items():
+        ss[pq] = t
 
     # (b) merge alignment: all post_end slots of post p identical across SPUs
-    for spu in range(m):
-        for t in range(depth):
-            if tables.post_end[spu, t]:
-                pq = int(tables.post[spu, t])
-                assert tables.send_slot[pq] == t, \
-                    f"post {pq} sent at {t} != slot {tables.send_slot[pq]}"
+    pe_spu, pe_slot = np.nonzero(tables.post_end)
+    pe_post = tables.post[pe_spu, pe_slot]
+    bad = ss[pe_post] != pe_slot
+    if bad.any():
+        i = int(np.argmax(bad))                 # first violation, (spu, t)
+        raise AssertionError(
+            f"post {int(pe_post[i])} sent at {int(pe_slot[i])} "
+            f"!= slot {tables.send_slot[int(pe_post[i])]}")
     # exactly one post_end per (spu, post with synapses there)
-    for spu in range(m):
-        pe_posts = tables.post[spu][tables.post_end[spu]]
-        assert len(pe_posts) == len(set(pe_posts.tolist())), \
-            "duplicate post_end in one SPU"
-        have = set(tables.post[spu][tables.pre[spu] != NOP].tolist())
-        assert set(pe_posts.tolist()) == have, "missing post_end"
+    pe_key = pe_spu * n + pe_post
+    assert len(np.unique(pe_key)) == len(pe_key), \
+        "duplicate post_end in one SPU"
+    assert np.array_equal(np.unique(pe_key), np.unique(spu_i * n + post_v)), \
+        "missing post_end"
 
     # (c) all ops of (spu, post) at slots <= send slot
-    for spu in range(m):
-        for t in range(depth):
-            if tables.pre[spu, t] != NOP:
-                assert t <= tables.send_slot[int(tables.post[spu, t])]
+    assert (slot_i <= ss[post_v]).all()
 
     # (d) pre_end exactly on last reference per (spu, pre)
-    for spu in range(m):
-        last: dict[int, int] = {}
-        for t in range(depth):
-            if tables.pre[spu, t] != NOP:
-                last[int(tables.pre[spu, t])] = t
-        flagged = {int(tables.pre[spu, t]): t
-                   for t in range(depth) if tables.pre_end[spu, t]}
-        assert flagged == last, "pre_end flags wrong"
+    key = spu_i * n + pre_v
+    order = np.lexsort((slot_i, key))
+    k_sorted, s_sorted = key[order], slot_i[order]
+    is_last = np.r_[k_sorted[1:] != k_sorted[:-1], np.ones(min(len(key), 1),
+                                                           bool)]
+    fe_spu, fe_slot = np.nonzero(tables.pre_end)
+    fkey = fe_spu * n + tables.pre[fe_spu, fe_slot]
+    forder = np.lexsort((fe_slot, fkey))
+    fk, fs = fkey[forder], fe_slot[forder]
+    f_last = np.r_[fk[1:] != fk[:-1], np.ones(min(len(fk), 1), bool)]
+    assert (np.array_equal(fk[f_last], k_sorted[is_last])
+            and np.array_equal(fs[f_last], s_sorted[is_last])), \
+        "pre_end flags wrong"

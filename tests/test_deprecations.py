@@ -1,0 +1,47 @@
+"""The deprecated pre-Program wrappers must WARN, not silently delegate."""
+import numpy as np
+import pytest
+
+from repro.core import (HardwareConfig, compile_snn, compile_quantized,
+                        random_graph, run_mapped_batched,
+                        compile as compile_program)
+from repro.snn import MNIST_CONFIG, QuantConfig, quantize
+from repro.snn.models import init_params
+import jax
+
+
+HW = HardwareConfig(n_spus=4, unified_mem_depth=256, concentration=3,
+                    max_neurons=64, max_post_neurons=32)
+
+
+def test_compile_snn_warns_and_delegates():
+    g = random_graph(8, 12, 80, seed=0)
+    with pytest.warns(DeprecationWarning, match="compile_snn is deprecated"):
+        tables, report, part = compile_snn(g, HW, seed=0, max_iters=2000)
+    fresh = compile_program(g, HW, seed=0, max_iters=2000)
+    np.testing.assert_array_equal(tables.pre, fresh.tables.pre)
+    np.testing.assert_array_equal(part.assign, fresh.part.assign)
+
+
+def test_compile_quantized_warns():
+    params = init_params(MNIST_CONFIG, jax.random.PRNGKey(0))
+    q = quantize(params, MNIST_CONFIG,
+                 QuantConfig(weight_bits=4, potential_bits=8))
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=10 ** 6, concentration=3,
+                        max_neurons=2048, max_post_neurons=1024)
+    with pytest.warns(DeprecationWarning,
+                      match="compile_quantized is deprecated"):
+        tables, report, part = compile_quantized(q, hw, max_iters=100)
+    assert tables.depth > 0
+
+
+def test_run_mapped_batched_warns():
+    g = random_graph(8, 12, 80, seed=1)
+    program = compile_program(g, HW, seed=0, max_iters=2000)
+    ext = (np.random.default_rng(0).random((4, 8)) < 0.3).astype(np.int32)
+    with pytest.warns(DeprecationWarning,
+                      match="run_mapped_batched is deprecated"):
+        s, v, _ = run_mapped_batched(g, program.tables, ext)
+    s2, v2, _ = program.run(ext)
+    np.testing.assert_array_equal(s, s2)
+    np.testing.assert_array_equal(v, v2)

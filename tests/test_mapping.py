@@ -1,0 +1,338 @@
+"""Tests for the mapping search subsystem (core/mapping/).
+
+The load-bearing suite is PARITY: the vectorized population core must
+reproduce the preserved legacy loop bit-for-bit on the same
+(graph, hw, seed) — assignment, scores, iteration count, perturbation
+count, and score history — across feedforward and recurrent graphs,
+both move modes, sampled and full member scans, and runs that cross
+perturbation events.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BASELINES, HardwareConfig, SearchConfig, STRATEGIES,
+                        compile as compile_program, get_strategy, partition,
+                        random_graph, register_strategy, schedule,
+                        validate_schedule)
+from repro.core.mapping import (Books, FrameworkStrategy, framework_partition,
+                                partition_legacy, portfolio_search, walk)
+from repro.core.mapping.strategies import BaselineStrategy
+from repro.snn.lif import LIFIntParams
+
+
+def feedforward_graph(seed=0, n_in=24, n_out=16, n_syn=300):
+    """Pure feedforward: every pre is an input neuron."""
+    rng = np.random.default_rng(seed)
+    flat = rng.choice(n_in * n_out, size=n_syn, replace=False)
+    pre = (flat // n_out).astype(np.int32)
+    post = (flat % n_out + n_in).astype(np.int32)
+    w = rng.integers(1, 8, n_syn).astype(np.int32) * \
+        rng.choice([-1, 1], n_syn).astype(np.int32)
+    from repro.core.graph import SNNGraph
+    g = SNNGraph(n_in, n_in + n_out, pre, post, w,
+                 LIFIntParams(leak_shift=2, v_threshold=15, v_reset=0),
+                 output_slice=(n_in, n_in + n_out))
+    g.validate()
+    return g
+
+
+HW8 = HardwareConfig(n_spus=8, unified_mem_depth=24, concentration=3,
+                     max_neurons=256, max_post_neurons=128)
+
+
+def assert_parity(a, b):
+    np.testing.assert_array_equal(a.assign, b.assign)
+    np.testing.assert_array_equal(a.scores, b.scores)
+    assert a.feasible == b.feasible
+    assert a.iterations == b.iterations
+    assert a.perturbations == b.perturbations
+    assert a.score_history == b.score_history
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_parity_recurrent(seed):
+    """random_graph mixes input->internal and internal->internal edges."""
+    g = random_graph(16, 32, 900, seed=2)
+    kw = dict(max_iters=20000)
+    assert_parity(partition_legacy(g, HW8, seed=seed, **kw),
+                  partition(g, HW8, seed=seed, **kw))
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_parity_feedforward(seed):
+    g = feedforward_graph(seed=1)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=16, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    assert_parity(partition_legacy(g, hw, seed=seed, max_iters=20000),
+                  partition(g, hw, seed=seed, max_iters=20000))
+
+
+def test_parity_with_sampling_and_perturbations():
+    """Tight memory + tiny scan_cap forces the sampled-scan and the
+    stagnation/perturbation paths through the identical RNG stream."""
+    g = random_graph(12, 24, 800, seed=3)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=11, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    kw = dict(max_iters=60000, scan_cap=24, stagnation_window=120)
+    a = partition_legacy(g, hw, seed=0, **kw)
+    b = partition(g, hw, seed=0, **kw)
+    assert a.perturbations > 0, "config too loose to exercise perturbation"
+    assert_parity(a, b)
+
+
+def test_parity_nudge_mode():
+    g = random_graph(16, 32, 600, seed=2)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=30, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    kw = dict(move_mode="nudge", max_iters=8000)
+    assert_parity(partition_legacy(g, hw, seed=0, **kw),
+                  partition(g, hw, seed=0, **kw))
+
+
+def test_parity_infeasible_budget_exhaustion():
+    """Both sides must return the identical best-seen state when the
+    iteration budget runs out without feasibility."""
+    g = random_graph(12, 24, 800, seed=3)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=11, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    a = partition_legacy(g, hw, seed=0, max_iters=300)
+    b = partition(g, hw, seed=0, max_iters=300)
+    assert not a.feasible
+    assert_parity(a, b)
+
+
+# -- the batched tree / occupancy primitives --------------------------------
+
+def test_walk_batched_matches_single():
+    rng = np.random.default_rng(0)
+    m, e, r_n = 8, 200, 5
+    depth = 3
+    p = rng.random((r_n, m - 1, e))
+    r = rng.random((r_n, m - 1, e))
+    batched = walk(p, r, depth)
+    for k in range(r_n):
+        np.testing.assert_array_equal(batched[k], walk(p[k], r[k], depth))
+
+
+def test_books_match_ground_truth_after_search():
+    g = random_graph(16, 32, 700, seed=4)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=26, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    res = partition(g, hw, seed=0, max_iters=10000)
+    books = Books(g, hw, res.assign[None])
+    w_id = books.w_id
+    for i in range(hw.n_spus):
+        sel = res.assign == i
+        assert books.n_posts[0, i] == len(np.unique(g.post[sel]))
+        assert books.n_weights[0, i] == len(np.unique(w_id[sel]))
+    np.testing.assert_array_equal(books.scores_r(0), res.scores)
+    # presence counters match the occupancy planes
+    np.testing.assert_array_equal(books.np_post[0],
+                                  (books.cnt_post[0] > 0).sum(0))
+    np.testing.assert_array_equal(books.np_w[0],
+                                  (books.cnt_w[0] > 0).sum(0))
+
+
+def test_restart_population_matches_serial_runs():
+    """Restart k of the lockstep population is bit-identical to a fresh
+    single run with seed base+k."""
+    g = random_graph(12, 24, 700, seed=5)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=13, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    _, results, _ = framework_partition(g, hw, seed=10, restarts=3,
+                                        max_iters=4000, early_exit=False)
+    for k, res in enumerate(results):
+        assert_parity(res, partition(g, hw, seed=10 + k, max_iters=4000))
+
+
+# -- baselines + strategy registry ------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_baseline_full_valid_assignment(name):
+    g = random_graph(16, 32, 500, seed=6)
+    res = BASELINES[name](g, HW8)
+    assert res.assign.shape == (g.n_synapses,)
+    assert res.assign.min() >= 0 and res.assign.max() < HW8.n_spus
+    assert res.scores.shape == (HW8.n_spus,)
+    tables = schedule(g, res.assign, HW8)
+    validate_schedule(g, tables)
+
+
+def test_registry_has_framework_and_all_baselines():
+    assert set(STRATEGIES) == {"framework"} | set(BASELINES)
+    assert isinstance(STRATEGIES["framework"], FrameworkStrategy)
+
+
+def test_registry_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown method 'does_not_exist'"):
+        get_strategy("does_not_exist")
+    g = random_graph(8, 8, 40, seed=0)
+    with pytest.raises(ValueError, match="unknown method"):
+        compile_program(g, HW8, method="does_not_exist")
+
+
+def test_register_strategy_replace_semantics():
+    dummy = BaselineStrategy("synapse_rr", BASELINES["synapse_rr"])
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy(dummy)
+    custom = BaselineStrategy("test_custom_rr", BASELINES["synapse_rr"])
+    try:
+        register_strategy(custom)
+        assert get_strategy("test_custom_rr") is custom
+    finally:
+        STRATEGIES.pop("test_custom_rr", None)
+
+
+@pytest.mark.parametrize("name", ["framework", "post_neuron_rr",
+                                  "synapse_rr", "weight_rr"])
+def test_compile_reaches_every_strategy(name):
+    g = random_graph(12, 16, 200, seed=7)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    program = compile_program(g, hw, method=name, max_iters=3000)
+    assert program.report.method == name
+    assert program.feasible
+    assert program.report.search is None           # no portfolio used
+
+
+# -- portfolio search -------------------------------------------------------
+
+def _tight_instance():
+    g = random_graph(12, 24, 800, seed=3)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=14, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    return g, hw
+
+
+def test_portfolio_beats_single_seed_budget():
+    """The acceptance scenario: a tight config where the single-seed
+    compile exhausts max_iters infeasible, but the restart portfolio
+    returns a feasible mapping — with the trace on the report."""
+    g, hw = _tight_instance()
+    single = compile_program(g, hw, seed=0, max_iters=60)
+    assert not single.feasible
+    program = compile_program(g, hw,
+                              search=SearchConfig(restarts=8,
+                                                  max_iters=60000))
+    assert program.feasible
+    rep = program.report
+    assert rep.method == "portfolio"
+    assert rep.search is not None
+    assert rep.candidates_tried == len(rep.search.candidates) > 1
+    sel = rep.search.selected
+    assert sel.feasible and sel.ot_depth == program.ot_depth
+
+
+def test_compile_rejects_partition_args_alongside_search():
+    g, hw = _tight_instance()
+    with pytest.raises(ValueError, match="SearchConfig"):
+        compile_program(g, hw, seed=7, search=SearchConfig(restarts=2))
+    with pytest.raises(ValueError, match="SearchConfig"):
+        compile_program(g, hw, max_iters=50,
+                        search=SearchConfig(restarts=2))
+
+
+def test_portfolio_trace_contents_and_ranking():
+    g = random_graph(16, 32, 500, seed=8)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    part, trace, tables = portfolio_search(
+        g, hw, SearchConfig(restarts=2, max_iters=2000, early_exit=False))
+    names = {c.strategy for c in trace.candidates}
+    assert names == {"framework"} | set(BASELINES)
+    feas = [c for c in trace.candidates if c.feasible]
+    assert feas, "relaxed memory: everything should be feasible"
+    # winner minimizes (OT depth, memory-line usage) over the feasible
+    sel = trace.selected
+    assert sel.ot_depth == min(c.ot_depth for c in feas)
+    assert all(c.memory_lines is not None for c in feas)
+    best_depth = [c for c in feas if c.ot_depth == sel.ot_depth]
+    assert sel.memory_lines == min(c.memory_lines for c in best_depth)
+    assert tables is not None and tables.depth == sel.ot_depth
+    assert part.feasible
+
+
+def test_portfolio_budget_exhaustion_flag():
+    g = random_graph(12, 24, 800, seed=3)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=5, concentration=3,
+                        max_neurons=64, max_post_neurons=32)   # unsatisfiable
+    _, trace, _ = portfolio_search(
+        g, hw, SearchConfig(restarts=2, max_iters=10 ** 8,
+                            include_baselines=False,
+                            budget_seconds=0.2))
+    assert trace.budget_exhausted
+    assert trace.seconds < 5.0
+    assert not trace.n_feasible
+
+
+def test_portfolio_trace_roundtrips_through_artifact(tmp_path):
+    g, hw = _tight_instance()
+    program = compile_program(g, hw, search=SearchConfig(restarts=4,
+                                                         max_iters=30000))
+    path = program.save(tmp_path / "with_trace")
+    from repro.core import Program
+    loaded = Program.load(path)
+    a, b = program.report.search, loaded.report.search
+    assert b is not None
+    assert [c.strategy for c in a.candidates] == \
+           [c.strategy for c in b.candidates]
+    assert [c.feasible for c in a.candidates] == \
+           [c.feasible for c in b.candidates]
+    assert a.selected.strategy == b.selected.strategy
+    assert loaded.report.candidates_tried == program.report.candidates_tried
+
+
+# -- vectorized validate_schedule keeps its messages ------------------------
+
+def _valid_tables():
+    g = random_graph(16, 32, 400, seed=9)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    res = BASELINES["synapse_rr"](g, hw)
+    return g, schedule(g, res.assign, hw)
+
+
+def test_validate_schedule_passes_on_valid():
+    g, tables = _valid_tables()
+    validate_schedule(g, tables)
+
+
+def test_validate_schedule_multiset_message():
+    g, tables = _valid_tables()
+    spu, slot = np.argwhere(tables.pre != -1)[0]
+    tables.weight[spu, slot] += 1
+    with pytest.raises(AssertionError,
+                       match="op multiset != synapse multiset"):
+        validate_schedule(g, tables)
+
+
+def test_validate_schedule_count_message():
+    g, tables = _valid_tables()
+    spu, slot = np.argwhere(tables.pre != -1)[0]
+    tables.pre[spu, slot] = -1
+    with pytest.raises(AssertionError, match="ops != .* synapses"):
+        validate_schedule(g, tables)
+
+
+def test_validate_schedule_send_slot_message():
+    g, tables = _valid_tables()
+    pq = tables.send_order[0]
+    tables.send_slot[pq] += 1
+    with pytest.raises(AssertionError, match=f"post {pq} sent at"):
+        validate_schedule(g, tables)
+
+
+def test_validate_schedule_missing_post_end_message():
+    g, tables = _valid_tables()
+    spu, slot = np.argwhere(tables.post_end)[0]
+    tables.post_end[spu, slot] = False
+    with pytest.raises(AssertionError, match="missing post_end"):
+        validate_schedule(g, tables)
+
+
+def test_validate_schedule_pre_end_message():
+    g, tables = _valid_tables()
+    spu, slot = np.argwhere(tables.pre_end)[0]
+    tables.pre_end[spu, slot] = False
+    with pytest.raises(AssertionError, match="pre_end flags wrong"):
+        validate_schedule(g, tables)

@@ -106,14 +106,17 @@ def _no_repartition(monkeypatch):
     import importlib
     import repro.core.passes as passes_mod
     # the package re-exports the `partition` FUNCTION, shadowing the
-    # submodule attribute — resolve the module via importlib
+    # submodule attribute — resolve the modules via importlib
     part_mod = importlib.import_module("repro.core.partition")
+    search_mod = importlib.import_module("repro.core.mapping.search")
 
     def boom(*a, **kw):
         raise AssertionError("partitioner must not run on load")
     monkeypatch.setattr(part_mod, "partition", boom)
-    monkeypatch.setattr(passes_mod, "partition", boom)
+    monkeypatch.setattr(search_mod, "framework_partition", boom)
+    monkeypatch.setattr(search_mod, "_Population", boom)
     monkeypatch.setattr(passes_mod, "partition_pass", boom)
+    monkeypatch.setattr(passes_mod, "search_pass", boom)
 
 
 @pytest.mark.parametrize("kind", ["feedforward", "recurrent"])

@@ -27,12 +27,14 @@ MODULES = [
     "benchmarks.fig14_15_balance_reuse",  # Fig 14 + 15
     "benchmarks.kernel_benchmarks",       # Pallas kernel structure
     "benchmarks.partitioner_throughput",  # mapping-subsystem speedup
+    "benchmarks.scheduler_throughput",    # scheduling-subsystem speedup
     "benchmarks.roofline_table",          # §Roofline aggregation
 ]
 
 
 SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
-                 "benchmarks.partitioner_throughput"]
+                 "benchmarks.partitioner_throughput",
+                 "benchmarks.scheduler_throughput"]
 
 
 def main() -> None:

@@ -61,3 +61,15 @@ s_l, _, _ = loaded.run(ext_b)
 assert np.array_equal(s_l, s_b), "artifact round-trip must be bit-exact"
 print(f"saved+loaded {path.name}: outputs identical, "
       f"{len(loaded.init_packets())} init packets")
+
+# 8. scheduling is pluggable (paper §6.3): schedule_method= picks the
+#    post transmit-order strategy, and compile(search=...) co-optimizes
+#    the JOINT (mapping, schedule strategy) pair — every candidate
+#    mapping is scored under every registered strategy
+from repro.core import SCHEDULE_STRATEGIES, SearchConfig
+depths = {name: compile(g, hw, schedule_method=name).ot_depth
+          for name in SCHEDULE_STRATEGIES}
+joint = compile(g, hw, search=SearchConfig(restarts=4, early_exit=False))
+print(f"per-strategy OT depths={depths}  joint pick="
+      f"{joint.report.search.selected.strategy}+"
+      f"{joint.report.schedule_method} at depth {joint.ot_depth}")

@@ -6,7 +6,10 @@
 #                 search, strategy registry, legacy parity reference
 #   partition     single-seed compatibility shim over mapping/
 #   baselines     round-robin baselines (§7.4.1)
-#   schedule      heuristic scheduling (§6.3)
+#   scheduling/   the scheduling subsystem (§6.3): vectorized array core,
+#                 schedule-strategy registry, legacy parity reference,
+#                 OpTables/LoweredProgram + lowering, legality checks
+#   schedule      compatibility shim over scheduling/
 #   engine        functional executor + cycle/energy model (§4, §7)
 #   engine_jax    compiled batched executor (lax.scan + Pallas NU)
 #   cost          FPGA resource model (Table 2 fit)
@@ -26,8 +29,11 @@ from repro.core.mapping import (CandidateTrace, MappingStrategy,
                                 portfolio_search, register_strategy)
 from repro.core.baselines import (BASELINES, post_neuron_round_robin,
                                   synapse_round_robin, weight_round_robin)
-from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
-                                 schedule, validate_schedule)
+from repro.core.scheduling import (NOP, LoweredProgram, OpTables,
+                                   SCHEDULE_STRATEGIES, ScheduleStrategy,
+                                   get_schedule_strategy, lower_tables,
+                                   register_schedule_strategy, schedule,
+                                   validate_schedule)
 from repro.core.engine import (CycleModel, CycleReport, PowerModel,
                                MergeAlignmentError, oracle_packet_counts,
                                packet_stats, run_mapped, run_oracle)
@@ -48,6 +54,9 @@ __all__ = [
     "BASELINES", "post_neuron_round_robin", "synapse_round_robin",
     "weight_round_robin", "NOP", "LoweredProgram", "OpTables", "lower_tables",
     "schedule", "validate_schedule",
+    # scheduling subsystem
+    "SCHEDULE_STRATEGIES", "ScheduleStrategy", "get_schedule_strategy",
+    "register_schedule_strategy",
     "CycleModel", "CycleReport", "PowerModel", "MergeAlignmentError",
     "oracle_packet_counts", "packet_stats", "run_mapped", "run_oracle",
     "JaxMappedEngine", "run_mapped_batched", "ResourceModel", "ResourceReport",

@@ -23,7 +23,7 @@ from repro.core.memory_model import HardwareConfig
 from repro.core.partition import PartitionResult
 from repro.core.passes import (CompileReport,  # noqa: F401 (re-export)
                                initialization_packets)
-from repro.core.schedule import OpTables
+from repro.core.scheduling import OpTables
 from repro.snn.quantize import QuantizedSNN
 
 

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.graph import SNNGraph
 from repro.core.memory_model import HardwareConfig
-from repro.core.schedule import NOP, OpTables
+from repro.core.scheduling import NOP, OpTables
 from repro.snn.lif import lif_step_int
 
 
@@ -50,12 +50,18 @@ def oracle_packet_counts(ext_spikes: np.ndarray, spikes: np.ndarray
     (``run_mapped`` counts exactly this set). Lets the oracle engine of
     :meth:`repro.core.program.Program.run` report the same stats dict as
     the mapped executors.
+
+    Accepts ``[T, n]`` inputs (returning ``[T]`` counts) or batched
+    ``[B, T, n]`` (returning ``[B, T]``): one vectorized count + shift
+    along the timestep axis, no per-step loop.
     """
-    t_steps = ext_spikes.shape[0]
-    pkts = np.zeros(t_steps, np.int64)
-    for t in range(t_steps):
-        prev = np.count_nonzero(spikes[t - 1]) if t else 0
-        pkts[t] = np.count_nonzero(ext_spikes[t]) + prev
+    ext = np.asarray(ext_spikes)
+    s = np.asarray(spikes)
+    if ext.ndim not in (2, 3) or s.ndim != ext.ndim:
+        raise ValueError(f"expected matching [T, n] or [B, T, n] arrays; "
+                         f"got {ext.shape} and {s.shape}")
+    pkts = np.count_nonzero(ext, axis=-1).astype(np.int64)
+    pkts[..., 1:] += np.count_nonzero(s[..., :-1, :], axis=-1)
     return pkts
 
 
@@ -232,12 +238,26 @@ class CycleModel:
 
     def run(self, packet_counts: np.ndarray, ot_depth: int,
             n_synapses_total: int) -> CycleReport:
-        dist = syn = over = 0
-        for n in packet_counts:
-            a, b, c = self.timestep_cycles(int(n), ot_depth)
-            dist += a
-            syn += b
-            over += c
+        """Aggregate one sample's per-timestep packet counts.
+
+        ``packet_counts`` must be 1-D ``[T]``; the per-timestep phase
+        costs are affine in the packet count, so the whole run reduces
+        to one sum instead of a Python loop. Batched ``[B, T]`` arrays
+        are rejected — aggregate per sample (what
+        :meth:`repro.core.program.Program.profile` does) rather than
+        silently iterating rows.
+        """
+        pkts = np.asarray(packet_counts)
+        if pkts.ndim != 1:
+            raise ValueError(
+                f"packet_counts must be 1-D [T]; got shape {pkts.shape} — "
+                f"profile batched runs per sample (Program.profile "
+                f"aggregates them)")
+        t_steps = len(pkts)
+        d = self.hw.tree_depth
+        dist = int(pkts.sum()) + t_steps * (1 + d)
+        syn = t_steps * 2 * ot_depth
+        over = t_steps * (d + self.NU_PIPELINE + 1)
         total = dist + syn + over
         lat_us = total / self.hw.clock_mhz
         p = self.power.total_w(self.hw)

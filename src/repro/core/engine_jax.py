@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core.engine import packet_stats
 from repro.core.graph import SNNGraph
-from repro.core.schedule import LoweredProgram, OpTables, lower_tables
+from repro.core.scheduling import LoweredProgram, OpTables, lower_tables
 from repro.kernels.lif_update import lif_update_int
 from repro.kernels.ops import _default_interpret
 from repro.snn.lif import LIFIntParams, lif_step_int

@@ -16,9 +16,11 @@ Two layers:
 2. ``portfolio_search`` — the portfolio driver behind
    ``compile(search=SearchConfig(...))``: races the framework
    population against every :data:`repro.core.baselines.BASELINES`
-   seed, schedules the feasible candidates, and keeps the best by
-   (feasible, min OT depth, min memory). Supports early exit at the
-   first feasible restart and a wall-clock budget; every candidate is
+   seed, schedules each feasible candidate under every registered
+   schedule strategy, and keeps the best JOINT (mapping, strategy)
+   pair by (feasible, min OT depth, min memory) — §6.3
+   co-optimization over both axes. Supports early exit at the first
+   feasible restart and a wall-clock budget; every candidate is
    recorded in a :class:`SearchTrace` that rides on the
    ``CompileReport``.
 """
@@ -435,10 +437,14 @@ class CandidateTrace:
     min_score: int                # worst-SPU Eq. (10) score
     iterations: int
     seconds: float
-    ot_depth: int | None = None   # scheduled only for feasible candidates
+    ot_depth: int | None = None   # best strategy's depth (feasible only)
     memory_kb: float | None = None        # Eq. (11) at this OT depth
     memory_lines: int | None = None       # total UM lines the mapping uses
     selected: bool = False
+    # joint co-optimization (§6.3): the best ScheduleStrategy for this
+    # mapping, and the OT depth under every registered strategy
+    schedule_method: str | None = None
+    schedule_depths: dict | None = None
 
 
 @dataclasses.dataclass
@@ -472,16 +478,24 @@ class SearchTrace:
 
 def portfolio_search(g: SNNGraph, hw: HardwareConfig,
                      config: SearchConfig | None = None):
-    """Portfolio mapping search: framework restarts raced against the
-    round-robin baselines; best (feasible, min OT depth, min memory)
-    candidate wins.
+    """Joint portfolio search over (mapping, schedule strategy) pairs.
+
+    Framework restarts are raced against the round-robin baselines;
+    every feasible candidate mapping is then scheduled under EVERY
+    registered :class:`~repro.core.scheduling.ScheduleStrategy`, and
+    the joint pair minimizing (infeasible, OT depth, memory) wins —
+    the paper's §6.3 co-optimization closed over both axes.
 
     Returns ``(part, trace, tables)`` where ``tables`` is the winner's
-    already-scheduled OpTables (None if the winner is infeasible —
-    callers schedule it themselves, matching single-seed ``compile``).
+    already-scheduled OpTables under its best strategy (None if the
+    winner is infeasible — callers schedule it themselves, matching
+    single-seed ``compile``). The winning strategy and per-strategy
+    depths ride on ``trace.selected.schedule_method`` /
+    ``.schedule_depths``.
     """
     from repro.core.baselines import BASELINES          # no import cycle
-    from repro.core.schedule import schedule
+    from repro.core.scheduling import (SCHEDULE_STRATEGIES, group_info,
+                                       schedule)
 
     cfg = config or SearchConfig()
     t0 = time.perf_counter()
@@ -514,12 +528,14 @@ def portfolio_search(g: SNNGraph, hw: HardwareConfig,
             min_score=int(res.scores.min()), iterations=res.iterations,
             seconds=fw_seconds / max(len(fw_results), 1)), res))
 
-    # schedule the feasible candidates: OT depth decides the race, with
+    # schedule the feasible candidates under EVERY registered schedule
+    # strategy: min OT depth over strategies decides the race, with
     # total memory-line usage (the assignment's real footprint — memory_kb
     # is a pure function of depth for fixed hw) as the tie-breaker. The
     # budget still applies: once it is spent, at least one feasible
     # candidate is scheduled (compile needs its tables) and the rest keep
-    # ot_depth=None.
+    # ot_depth=None. Strategy ties go to the earliest-registered name
+    # (the 'slack' default), so results are deterministic.
     scheduled: dict[int, object] = {}
     m, l = hw.n_spus, hw.unified_mem_depth
     for i, (ct, res) in enumerate(entries):
@@ -530,10 +546,19 @@ def portfolio_search(g: SNNGraph, hw: HardwareConfig,
                 and time.perf_counter() >= deadline:
             exhausted = True
             continue
-        tables = schedule(g, res.assign, hw)
-        scheduled[i] = tables
-        ct.ot_depth = int(tables.depth)
-        ct.memory_kb = float(total_memory_kb(hw, tables.depth))
+        info = group_info(g, res.assign)        # one grouping, S strategies
+        depths: dict[str, int] = {}
+        best_tables = best_name = None
+        for name in SCHEDULE_STRATEGIES:
+            tables = schedule(g, res.assign, hw, method=name, info=info)
+            depths[name] = int(tables.depth)
+            if best_tables is None or tables.depth < best_tables.depth:
+                best_tables, best_name = tables, name
+        scheduled[i] = best_tables
+        ct.ot_depth = int(best_tables.depth)
+        ct.schedule_method = best_name
+        ct.schedule_depths = depths
+        ct.memory_kb = float(total_memory_kb(hw, best_tables.depth))
 
     feasible = [i for i, (ct, _) in enumerate(entries) if ct.feasible]
     if feasible:

@@ -65,7 +65,15 @@ def scores_from_assignment(weights: np.ndarray, posts: np.ndarray,
 
 
 def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:
-    """Eq. (11): routing + M*(OT + UM) + Neuron State SRAM, in bits."""
+    """Eq. (11): routing + M*(OT + UM + Spike Memory) + Neuron State SRAM.
+
+    Every SPU holds an N-bit Spike Memory bitmap (one bit per
+    addressable neuron, set by the MC tree and cleared on Pre-End);
+    :func:`bram_count` has always packed it as a physical structure
+    (``m * ceil(n / 18Kb)`` halves), so it belongs in the bit total too
+    — the two models must agree about what memory exists
+    (tests/test_scheduling.py pins both against the Table 2 point).
+    """
     n, m, np_ = hw.max_neurons, hw.n_spus, hw.max_post_neurons
     s_um, k, ww = hw.unified_mem_depth, hw.concentration, hw.weight_bits
     lg = lambda x: math.ceil(math.log2(max(x, 2)))
@@ -73,8 +81,9 @@ def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:
     routing = n * m
     ot = op_table_depth * ot_entry
     um = k * ww * s_um
+    spike = n                                # per-SPU Spike Memory bitmap
     nu = np_ * (lg(n) + k * ww - lg(np_) + 1)
-    return routing + m * (ot + um) + nu
+    return routing + m * (ot + um + spike) + nu
 
 
 def total_memory_kb(hw: HardwareConfig, op_table_depth: int) -> float:

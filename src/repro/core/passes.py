@@ -28,8 +28,8 @@ from repro.core.mapping.search import (SearchConfig, SearchTrace,
                                        portfolio_search)
 from repro.core.mapping.strategies import get_strategy
 from repro.core.memory_model import HardwareConfig
-from repro.core.schedule import (NOP, LoweredProgram, OpTables, lower_tables,
-                                 schedule, validate_schedule)
+from repro.core.scheduling import (NOP, LoweredProgram, OpTables,
+                                   lower_tables, schedule, validate_schedule)
 
 
 @dataclasses.dataclass
@@ -49,6 +49,10 @@ class CompileReport:
     compile_seconds: float
     search: SearchTrace | None = None    # portfolio trace (search= compiles)
     candidates_tried: int = 1            # mappings evaluated to pick this one
+    schedule_method: str = "slack"       # the ScheduleStrategy that won
+    # OT depth under every strategy evaluated for the chosen mapping
+    # ({schedule_method: ot_depth} when only one was run)
+    schedule_depths: dict | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -86,10 +90,15 @@ def search_pass(g: SNNGraph, hw: HardwareConfig,
 
 
 def schedule_pass(g: SNNGraph, part: PartitionResult | np.ndarray,
-                  hw: HardwareConfig) -> OpTables:
-    """Heuristic scheduling (paper §6.3) of an assignment into OpTables."""
+                  hw: HardwareConfig, *, method: str = "slack") -> OpTables:
+    """Heuristic scheduling (paper §6.3) of an assignment into OpTables.
+
+    ``method`` names a registered
+    :class:`~repro.core.scheduling.strategies.ScheduleStrategy` (the
+    post transmit-order policy); ``'slack'`` is the original scheduler.
+    """
     assign = part.assign if isinstance(part, PartitionResult) else part
-    return schedule(g, assign, hw)
+    return schedule(g, assign, hw, method=method)
 
 
 def validate_pass(g: SNNGraph, tables: OpTables) -> None:
@@ -117,7 +126,9 @@ def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
                  part: PartitionResult, *, method: str,
                  compile_seconds: float,
                  routing: np.ndarray | None = None,
-                 search: SearchTrace | None = None) -> CompileReport:
+                 search: SearchTrace | None = None,
+                 schedule_method: str = "slack",
+                 schedule_depths: dict | None = None) -> CompileReport:
     """Assemble the :class:`CompileReport` for a finished pipeline run."""
     syn, posts, weights = _spu_stats(g, part.assign, hw.n_spus)
     pkts = initialization_packets(g, tables, hw, routing=routing)
@@ -128,7 +139,10 @@ def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
         spu_weight_counts=weights, resources=resources(hw, tables.depth),
         n_init_packets=len(pkts), compile_seconds=compile_seconds,
         search=search,
-        candidates_tried=len(search.candidates) if search else 1)
+        candidates_tried=len(search.candidates) if search else 1,
+        schedule_method=schedule_method,
+        schedule_depths=(schedule_depths if schedule_depths is not None
+                         else {schedule_method: int(tables.depth)}))
 
 
 # ---------------------------------------------------------------------------

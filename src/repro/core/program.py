@@ -47,7 +47,7 @@ from repro.core.passes import (CompileReport, build_report,
                                initialization_packets, lower_pass,
                                partition_pass, schedule_pass, search_pass,
                                validate_pass)
-from repro.core.schedule import LoweredProgram, OpTables
+from repro.core.scheduling import LoweredProgram, OpTables
 from repro.kernels.ops import _default_interpret
 from repro.snn.quantize import QuantizedSNN
 
@@ -279,6 +279,10 @@ class Program:
                               "memory_kb": float(res.memory_kb)},
                 "search": rep.search.to_json() if rep.search else None,
                 "candidates_tried": int(rep.candidates_tried),
+                "schedule_method": rep.schedule_method,
+                "schedule_depths": ({k: int(v) for k, v
+                                     in rep.schedule_depths.items()}
+                                    if rep.schedule_depths else None),
             },
             "part": {
                 "feasible": bool(part.feasible),
@@ -349,7 +353,9 @@ class Program:
             compile_seconds=rh["compile_seconds"],
             search=(SearchTrace.from_json(rh["search"])
                     if rh.get("search") else None),
-            candidates_tried=rh.get("candidates_tried", 1))
+            candidates_tried=rh.get("candidates_tried", 1),
+            schedule_method=rh.get("schedule_method", "slack"),
+            schedule_depths=rh.get("schedule_depths"))
         # re-lower (pure, deterministic) — never re-partition
         lowered = lower_pass(g, tables)
         return cls(g, hw, tables, lowered, report, part,
@@ -363,7 +369,7 @@ class Program:
 def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
             method: str = "framework", engine: str = "jax", seed: int = 0,
             validate: bool = True, max_iters: int = 20000,
-            restarts: int = 1,
+            restarts: int = 1, schedule_method: str = "slack",
             search: SearchConfig | None = None) -> Program:
     """Compile an SNN (graph or quantized model) into a :class:`Program`.
 
@@ -371,13 +377,19 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     lower (see :mod:`repro.core.passes`) and wraps every product in the
     artifact. ``engine`` picks the default executor of
     :meth:`Program.run`; ``method``/``seed``/``max_iters``/``restarts``
-    parameterize the partitioning pass.
+    parameterize the partitioning pass, and ``schedule_method`` names
+    the registered
+    :class:`~repro.core.scheduling.ScheduleStrategy` ordering the post
+    transmissions (``'slack'`` is the original scheduler).
 
     Passing ``search=SearchConfig(...)`` replaces the single partition
-    pass with the portfolio mapping search (framework restarts raced
-    against every baseline; best feasible candidate by OT depth and
-    memory wins). The per-candidate trace lands on
-    ``program.report.search`` and survives ``save``/``load``.
+    pass with the joint portfolio search (framework restarts raced
+    against every baseline, each feasible mapping scheduled under every
+    registered schedule strategy; best (mapping, strategy) pair by OT
+    depth and memory wins). The per-candidate trace lands on
+    ``program.report.search``, the winning strategy on
+    ``program.report.schedule_method``, and both survive
+    ``save``/``load``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
@@ -386,24 +398,36 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
          else g_or_qsnn)
     trace = None
     tables = None
+    schedule_depths = None
     if search is not None:
-        if (method, seed, max_iters, restarts) != ("framework", 0, 20000, 1):
+        if (method, seed, max_iters, restarts, schedule_method) != \
+                ("framework", 0, 20000, 1, "slack"):
             raise ValueError(
-                "search= runs the portfolio and takes its parameters from "
-                "the SearchConfig; pass seed/max_iters/restarts there "
-                "instead of as compile() arguments")
+                "search= runs the joint portfolio and takes its parameters "
+                "from the SearchConfig; pass seed/max_iters/restarts there "
+                "instead of as compile() arguments (the portfolio explores "
+                "every registered schedule strategy, so schedule_method= "
+                "does not apply)")
         part, trace, tables = search_pass(g, hw, search)
         method = "portfolio"
+        if tables is not None:
+            sel = trace.selected
+            schedule_method = sel.schedule_method or "slack"
+            schedule_depths = sel.schedule_depths
+        else:
+            schedule_method = "slack"   # infeasible winner: default pipeline
     else:
         part = partition_pass(g, hw, method=method, seed=seed,
                               max_iters=max_iters, restarts=restarts)
     if tables is None:
-        tables = schedule_pass(g, part, hw)
+        tables = schedule_pass(g, part, hw, method=schedule_method)
     if validate:
         validate_pass(g, tables)
     lowered = lower_pass(g, tables)
     report = build_report(g, hw, tables, part, method=method,
                           compile_seconds=time.time() - t0,
-                          routing=lowered.routing, search=trace)
+                          routing=lowered.routing, search=trace,
+                          schedule_method=schedule_method,
+                          schedule_depths=schedule_depths)
     return Program(g, hw, tables, lowered, report, part,
                    default_engine=engine)

@@ -1,297 +1,22 @@
-"""Heuristic scheduling (paper §6.3).
+"""Heuristic scheduling (paper §6.3) — compatibility shim.
 
-Given a synapse->SPU assignment, produce per-SPU *Operation Tables* whose
-execution order guarantees ME-tree merge correctness: every SPU holding
-synapses of post-neuron p injects p's partial current in the SAME slot.
+The implementation moved to the :mod:`repro.core.scheduling` package
+(DESIGN.md §7.2): ``scheduling.tables`` owns the OpTables /
+LoweredProgram containers and the lowering, ``scheduling.vectorized``
+the array-core scheduler, ``scheduling.legacy`` the preserved reference
+loop, ``scheduling.strategies`` the registry behind
+``compile(schedule_method=...)``, and ``scheduling.validate`` the
+legality checks.
 
-Algorithm (faithful to the paper, plus an explicit send-slot recurrence
-that guarantees backward-fill feasibility):
-
-  1. Sort post-neurons ascending by max-synapses-on-any-single-SPU
-     (high-fan-in posts transmit last, maximizing slack).
-  2. Walk the sorted order keeping per-SPU cumulative op counts cum_i;
-     post p gets send slot  t_p = max(t_prev + 1, max_i cum_i(p) - 1).
-     (The paper uses consecutive slots, which suffices when #posts >=
-     per-SPU load; the max() generalizes it — with balanced load the depth
-     converges to max_i(total ops_i), exactly the paper's Fig. 13 regime.)
-  3. Fix one synapse of each (SPU, post) group at t_p with Post-End set.
-  4. Backward-fill the remaining synapses into free earlier slots,
-     processing posts in REVERSE send order (EDF-style; provably feasible
-     given the recurrence in 2).
-  5. Set Pre-End on the last op referencing each pre-synaptic neuron.
-  6. Remaining slots are NOPs.
+:func:`repro.core.scheduling.schedule` keeps the original signature and
+is BIT-IDENTICAL to the pre-split scheduler for the default
+``method='slack'`` (the parity suite in tests/test_scheduling.py
+enforces tables, send_slot/send_order, and infeasibility-message
+equality against the preserved loop).
 """
-from __future__ import annotations
+from repro.core.scheduling import (NOP, LoweredProgram,  # noqa: F401
+                                   OpTables, lower_tables, schedule,
+                                   validate_schedule)
 
-import bisect
-import dataclasses
-
-import numpy as np
-
-from repro.core.graph import SNNGraph
-from repro.core.memory_model import HardwareConfig
-
-
-NOP = -1
-
-
-@dataclasses.dataclass
-class OpTables:
-    """The mapped + scheduled program for the whole engine."""
-    depth: int                  # S_OT: operation-table depth == #slots
-    # all arrays are [M, depth]; NOP slots have pre == NOP
-    pre: np.ndarray             # global pre-neuron index
-    post: np.ndarray            # global post-neuron index
-    weight: np.ndarray          # int weight value
-    pre_end: np.ndarray         # bool
-    post_end: np.ndarray        # bool
-    send_slot: dict             # post global idx -> slot
-    send_order: list            # posts in send order
-    assign: np.ndarray          # [E] synapse -> SPU (the partition)
-
-    @property
-    def n_spus(self) -> int:
-        return self.pre.shape[0]
-
-    @classmethod
-    def from_dense(cls, pre: np.ndarray, post: np.ndarray, weight: np.ndarray,
-                   pre_end: np.ndarray, post_end: np.ndarray,
-                   assign: np.ndarray) -> "OpTables":
-        """Rebuild OpTables from the dense arrays alone.
-
-        ``send_slot``/``send_order`` are derived, not stored: every
-        Post-End op of post p sits in p's send slot (validate_schedule
-        invariant b), so the flags fully determine both. Used by
-        :meth:`repro.core.program.Program.load` to round-trip an
-        artifact without serializing Python containers.
-        """
-        spus, slots = np.nonzero(post_end)
-        send_slot = {int(p): int(t)
-                     for p, t in zip(post[spus, slots], slots)}
-        send_order = sorted(send_slot, key=send_slot.__getitem__)
-        return cls(int(pre.shape[1]), pre, post, weight, pre_end, post_end,
-                   send_slot, send_order, assign)
-
-
-def schedule(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig) -> OpTables:
-    m = hw.n_spus
-    e = g.n_synapses
-
-    # group synapses by (spu, post)
-    order = np.lexsort((g.pre, g.post, assign))
-    s_spu, s_post = assign[order], g.post[order]
-
-    posts = np.unique(g.post)
-    # count per (spu, post): c[spu][post]
-    group_keys = s_spu.astype(np.int64) * g.n_neurons + s_post
-    uniq_keys, key_start, key_count = np.unique(
-        group_keys, return_index=True, return_counts=True)
-
-    # per-post max count over SPUs (step 1)
-    post_of_key = (uniq_keys % g.n_neurons).astype(np.int64)
-    cmax: dict[int, int] = {}
-    for pk, c in zip(post_of_key.tolist(), key_count.tolist()):
-        cmax[pk] = max(cmax.get(pk, 0), int(c))
-    send_order = sorted(posts.tolist(), key=lambda q: (cmax[q], q))
-
-    # step 2: send slots via the feasibility recurrence
-    groups: dict[tuple[int, int], np.ndarray] = {}
-    for k, st, c in zip(uniq_keys.tolist(), key_start.tolist(),
-                        key_count.tolist()):
-        spu, pq = int(k // g.n_neurons), int(k % g.n_neurons)
-        groups[(spu, pq)] = order[st:st + c]
-
-    cum = np.zeros(m, np.int64)
-    send_slot: dict[int, int] = {}
-    t_prev = -1
-    for pq in send_order:
-        for spu in range(m):
-            grp = groups.get((spu, pq))
-            if grp is not None:
-                cum[spu] += len(grp)
-        t = max(t_prev + 1, int(cum.max()) - 1)
-        send_slot[pq] = t
-        t_prev = t
-    depth = t_prev + 1 if send_order else 0
-
-    pre_t = np.full((m, depth), NOP, np.int64)
-    post_t = np.full((m, depth), NOP, np.int64)
-    w_t = np.zeros((m, depth), np.int64)
-    pe_t = np.zeros((m, depth), bool)
-    poe_t = np.zeros((m, depth), bool)
-
-    # step 3: pin final synapse of every (spu, post) group at t_p
-    for (spu, pq), grp in groups.items():
-        t = send_slot[pq]
-        syn = int(grp[-1])
-        pre_t[spu, t] = g.pre[syn]
-        post_t[spu, t] = pq
-        w_t[spu, t] = g.weight[syn]
-        poe_t[spu, t] = True
-
-    # free-slot lists per SPU (ascending), minus the pinned send slots
-    free = []
-    for spu in range(m):
-        pinned = {int(send_slot[pq]) for (s, pq) in groups if s == spu}
-        free.append([t for t in range(depth) if t not in pinned])
-
-    # step 4: backward fill, reverse send order
-    for pq in reversed(send_order):
-        t_p = send_slot[pq]
-        for spu in range(m):
-            grp = groups.get((spu, pq))
-            if grp is None or len(grp) == 1:
-                continue
-            rest = grp[:-1]
-            fl = free[spu]
-            # indices of free slots strictly before t_p
-            hi = bisect.bisect_left(fl, t_p)
-            assert hi >= len(rest), (
-                f"schedule infeasible: SPU {spu} post {pq} needs "
-                f"{len(rest)} slots before {t_p}, has {hi}")
-            take = fl[hi - len(rest):hi]
-            del fl[hi - len(rest):hi]
-            for t, syn in zip(take, rest.tolist()):
-                pre_t[spu, t] = g.pre[syn]
-                post_t[spu, t] = pq
-                w_t[spu, t] = g.weight[syn]
-
-    # step 5: Pre-End on the last op touching each pre, per SPU
-    for spu in range(m):
-        seen: set[int] = set()
-        for t in range(depth - 1, -1, -1):
-            pr = int(pre_t[spu, t])
-            if pr != NOP and pr not in seen:
-                pe_t[spu, t] = True
-                seen.add(pr)
-
-    return OpTables(depth, pre_t, post_t, w_t, pe_t, poe_t,
-                    send_slot, send_order, assign.astype(np.int32))
-
-
-@dataclasses.dataclass(frozen=True)
-class LoweredProgram:
-    """Dense array form of a scheduled program, ready for compiled execution.
-
-    The (SPU, slot) grid of the OpTables is flattened into slot-major op
-    streams (all SPUs of slot 0, then slot 1, ...) — the exact order the
-    hardware commits ops — plus the MC-tree routing bitmap. This is the
-    single lowering shared by the Python reference executor
-    (``engine.run_mapped`` uses ``routing``) and the compiled batched
-    executor (``engine_jax`` uses the op streams). The Pre-End/Post-End
-    flags are not needed by the scan executor (its spike gating subsumes
-    them) but are kept so the lowering is the COMPLETE dense program —
-    the form a slot-level hardware executor would consume.
-    """
-    n_inputs: int
-    n_neurons: int
-    n_internal: int
-    n_spus: int
-    depth: int                  # S_OT of the source tables
-    # flattened non-NOP ops, slot-major; all arrays are [n_ops]
-    op_spu: np.ndarray          # int32 SPU executing the op
-    op_slot: np.ndarray         # int32 OT slot of the op
-    op_pre: np.ndarray          # int32 global pre-neuron index
-    op_post_local: np.ndarray   # int32 LOCAL post index (global - n_inputs)
-    op_weight: np.ndarray       # int32 weight
-    op_pre_end: np.ndarray      # bool Pre-End flag
-    op_post_end: np.ndarray     # bool Post-End flag
-    # MC-tree routing bitstrings: routing[q, i] == SPU i holds a synapse of q
-    routing: np.ndarray         # [n_neurons, n_spus] bool
-
-    @property
-    def n_ops(self) -> int:
-        return int(self.op_pre.shape[0])
-
-
-def lower_tables(g: SNNGraph, tables: OpTables) -> LoweredProgram:
-    """Lower scheduled OpTables into the dense :class:`LoweredProgram`."""
-    m, depth = tables.pre.shape
-    spu, slot = np.nonzero(tables.pre != NOP)
-    order = np.lexsort((spu, slot))          # slot-major commit order
-    spu, slot = spu[order], slot[order]
-
-    routing = np.zeros((g.n_neurons, m), bool)
-    routing[g.pre, tables.assign] = True
-
-    return LoweredProgram(
-        n_inputs=g.n_inputs,
-        n_neurons=g.n_neurons,
-        n_internal=g.n_internal,
-        n_spus=m,
-        depth=depth,
-        op_spu=spu.astype(np.int32),
-        op_slot=slot.astype(np.int32),
-        op_pre=tables.pre[spu, slot].astype(np.int32),
-        op_post_local=(tables.post[spu, slot] - g.n_inputs).astype(np.int32),
-        op_weight=tables.weight[spu, slot].astype(np.int32),
-        op_pre_end=tables.pre_end[spu, slot].copy(),
-        op_post_end=tables.post_end[spu, slot].copy(),
-        routing=routing,
-    )
-
-
-def validate_schedule(g: SNNGraph, tables: OpTables) -> None:
-    """Legality checks (DESIGN.md §7.3): raises AssertionError on violation.
-
-    All four invariants are numpy mask/lexsort expressions over the
-    ``[M, depth]`` tables — no Python loop over slots — so validation
-    stays a negligible slice of compile time at large OT depths. The
-    assertion messages are identical to the original loop-based checks.
-    """
-    valid = tables.pre != NOP
-    spu_i, slot_i = np.nonzero(valid)           # row-major: (spu, t) order
-    pre_v = tables.pre[spu_i, slot_i]
-    post_v = tables.post[spu_i, slot_i]
-    w_v = tables.weight[spu_i, slot_i]
-
-    # (a) every synapse appears exactly once
-    n_placed = int(valid.sum())
-    assert n_placed == g.n_synapses, \
-        f"{n_placed} ops != {g.n_synapses} synapses"
-    have = np.lexsort((w_v, post_v, pre_v))
-    want = np.lexsort((g.weight, g.post, g.pre))
-    assert (np.array_equal(pre_v[have], g.pre[want])
-            and np.array_equal(post_v[have], g.post[want])
-            and np.array_equal(w_v[have], g.weight[want])), \
-        "op multiset != synapse multiset"
-
-    # send slot per post as a dense lookup table
-    n = g.n_neurons
-    ss = np.full(n, -1, np.int64)
-    for pq, t in tables.send_slot.items():
-        ss[pq] = t
-
-    # (b) merge alignment: all post_end slots of post p identical across SPUs
-    pe_spu, pe_slot = np.nonzero(tables.post_end)
-    pe_post = tables.post[pe_spu, pe_slot]
-    bad = ss[pe_post] != pe_slot
-    if bad.any():
-        i = int(np.argmax(bad))                 # first violation, (spu, t)
-        raise AssertionError(
-            f"post {int(pe_post[i])} sent at {int(pe_slot[i])} "
-            f"!= slot {tables.send_slot[int(pe_post[i])]}")
-    # exactly one post_end per (spu, post with synapses there)
-    pe_key = pe_spu * n + pe_post
-    assert len(np.unique(pe_key)) == len(pe_key), \
-        "duplicate post_end in one SPU"
-    assert np.array_equal(np.unique(pe_key), np.unique(spu_i * n + post_v)), \
-        "missing post_end"
-
-    # (c) all ops of (spu, post) at slots <= send slot
-    assert (slot_i <= ss[post_v]).all()
-
-    # (d) pre_end exactly on last reference per (spu, pre)
-    key = spu_i * n + pre_v
-    order = np.lexsort((slot_i, key))
-    k_sorted, s_sorted = key[order], slot_i[order]
-    is_last = np.r_[k_sorted[1:] != k_sorted[:-1], np.ones(min(len(key), 1),
-                                                           bool)]
-    fe_spu, fe_slot = np.nonzero(tables.pre_end)
-    fkey = fe_spu * n + tables.pre[fe_spu, fe_slot]
-    forder = np.lexsort((fe_slot, fkey))
-    fk, fs = fkey[forder], fe_slot[forder]
-    f_last = np.r_[fk[1:] != fk[:-1], np.ones(min(len(fk), 1), bool)]
-    assert (np.array_equal(fk[f_last], k_sorted[is_last])
-            and np.array_equal(fs[f_last], s_sorted[is_last])), \
-        "pre_end flags wrong"
+__all__ = ["NOP", "OpTables", "LoweredProgram", "lower_tables",
+           "schedule", "validate_schedule"]

@@ -1,0 +1,59 @@
+"""SupraSNN scheduling subsystem (paper §6.3) — see DESIGN.md §7.2.
+
+#   tables      OpTables / LoweredProgram containers + lower_tables
+#   vectorized  the array-core scheduler (lexsort/cumsum/segment ops)
+#   legacy      the original Python loop, kept as the parity reference
+#   strategies  the ScheduleStrategy registry behind
+#               compile(schedule_method=...)
+#   validate    schedule legality checks
+
+:func:`schedule` is the public entry: resolve the strategy name to a
+send order, run the vectorized core. ``schedule(g, assign, hw)`` with
+no ``method`` is bit-exact with the pre-split ``core/schedule.py``
+(and with :func:`~repro.core.scheduling.legacy.schedule_legacy`).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import SNNGraph
+from repro.core.memory_model import HardwareConfig
+from repro.core.scheduling.legacy import schedule_legacy
+from repro.core.scheduling.strategies import (SCHEDULE_STRATEGIES,
+                                              ConsecutiveStrategy,
+                                              LoadBalanceStrategy,
+                                              ScheduleStrategy,
+                                              SlackStrategy,
+                                              get_schedule_strategy,
+                                              register_schedule_strategy)
+from repro.core.scheduling.tables import (NOP, LoweredProgram, OpTables,
+                                          lower_tables)
+from repro.core.scheduling.validate import validate_schedule
+from repro.core.scheduling.vectorized import (GroupInfo, group_info,
+                                              schedule_vectorized)
+
+
+def schedule(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig, *,
+             method: str = "slack",
+             info: GroupInfo | None = None) -> OpTables:
+    """Heuristic scheduling (paper §6.3) of an assignment into OpTables.
+
+    ``method`` names a registered :class:`ScheduleStrategy` (the post
+    transmit-order policy); the default ``'slack'`` reproduces the
+    original scheduler bit-exactly. ``info`` takes a precomputed
+    :func:`group_info` so multi-strategy callers group only once.
+    """
+    strategy = get_schedule_strategy(method)
+    gi = info if info is not None else group_info(g, assign)
+    return schedule_vectorized(g, assign, hw,
+                               send_order=strategy.send_order(gi), info=gi)
+
+
+__all__ = [
+    "NOP", "OpTables", "LoweredProgram", "lower_tables",
+    "schedule", "schedule_legacy", "schedule_vectorized",
+    "GroupInfo", "group_info", "validate_schedule",
+    "ScheduleStrategy", "SlackStrategy", "ConsecutiveStrategy",
+    "LoadBalanceStrategy", "SCHEDULE_STRATEGIES",
+    "get_schedule_strategy", "register_schedule_strategy",
+]

@@ -11,9 +11,8 @@ import pytest
 from conftest import make_ext, make_feedforward, make_hw
 from repro.configs.snn_paper import mnist_scale_random_graph
 from repro.core import compile as program_compile
-from repro.core import (JaxMappedEngine, compile_snn, lower_tables,
-                        random_graph, run_mapped, run_mapped_batched,
-                        run_oracle)
+from repro.core import (JaxMappedEngine, lower_tables, random_graph,
+                        run_mapped, run_mapped_batched, run_oracle)
 
 
 _hw, _feedforward, _ext = make_hw, make_feedforward, make_ext
@@ -24,9 +23,9 @@ _hw, _feedforward, _ext = make_hw, make_feedforward, make_ext
 def test_recurrent_batched_bit_exact_vs_oracle(nu_kernel):
     g = random_graph(12, 20, 160, seed=3)   # pre spans inputs AND internal
     assert (g.pre >= g.n_inputs).any(), "graph must contain recurrence"
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     ext = _ext(g, b=4, t=9, seed=1)
-    s, v, _ = run_mapped_batched(g, tables, ext, nu_kernel=nu_kernel)
+    s, v, _ = JaxMappedEngine(g, tables, nu_kernel=nu_kernel).run(ext)
     for b in range(ext.shape[0]):
         s_ref, v_ref = run_oracle(g, ext[b])
         np.testing.assert_array_equal(s[b], s_ref)
@@ -35,9 +34,9 @@ def test_recurrent_batched_bit_exact_vs_oracle(nu_kernel):
 
 def test_feedforward_batched_bit_exact_vs_oracle():
     g = _feedforward()
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     ext = _ext(g, b=3, t=12, rate=0.5, seed=2)
-    s, v, _ = run_mapped_batched(g, tables, ext)
+    s, v, _ = JaxMappedEngine(g, tables).run(ext)
     for b in range(ext.shape[0]):
         s_ref, v_ref = run_oracle(g, ext[b])
         np.testing.assert_array_equal(s[b], s_ref)
@@ -46,9 +45,9 @@ def test_feedforward_batched_bit_exact_vs_oracle():
 
 def test_packet_counts_match_run_mapped_stats():
     g = random_graph(10, 14, 100, seed=7)
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     ext = _ext(g, b=3, t=8, seed=4)
-    _, _, stats = run_mapped_batched(g, tables, ext)
+    _, _, stats = JaxMappedEngine(g, tables).run(ext)
     assert stats["packet_counts"].shape == (3, 8)
     for b in range(3):
         _, _, ref = run_mapped(g, tables, ext[b])
@@ -60,9 +59,9 @@ def test_packet_counts_match_run_mapped_stats():
 
 def test_unbatched_input_matches_run_mapped_shapes():
     g = random_graph(8, 10, 60, seed=9)
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     ext = _ext(g, b=1, t=6, seed=5)[0]
-    s_j, v_j, st_j = run_mapped_batched(g, tables, ext)
+    s_j, v_j, st_j = JaxMappedEngine(g, tables).run(ext)
     s_p, v_p, st_p = run_mapped(g, tables, ext)
     assert s_j.shape == s_p.shape and v_j.shape == v_p.shape
     np.testing.assert_array_equal(s_j, s_p)
@@ -74,10 +73,11 @@ def test_unbatched_input_matches_run_mapped_shapes():
 def test_mnist_scale_graph_bit_exact():
     """Acceptance: bit-exact on the MNIST-scale graph (784-126, 16 SPUs)."""
     g, hw = mnist_scale_random_graph()
-    tables, report, _ = compile_snn(g, hw, max_iters=40000)
-    assert report.feasible
+    program = program_compile(g, hw, max_iters=40000)
+    tables = program.tables
+    assert program.report.feasible
     ext = _ext(g, b=2, t=10, rate=0.2, seed=0)
-    s, v, stats = run_mapped_batched(g, tables, ext)
+    s, v, stats = JaxMappedEngine(g, tables).run(ext)
     for b in range(2):
         s_ref, v_ref = run_oracle(g, ext[b])
         np.testing.assert_array_equal(s[b], s_ref)
@@ -89,7 +89,7 @@ def test_mnist_scale_graph_bit_exact():
 
 def test_engine_reuse_and_ownership():
     g = random_graph(8, 10, 60, seed=11)
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     eng = JaxMappedEngine(g, tables)
     a = eng.run(_ext(g, 2, 5, seed=1))
     b = eng.run(_ext(g, 2, 5, seed=1))          # same input, same engine
@@ -107,7 +107,7 @@ def test_engine_reuse_and_ownership():
 
 def test_lower_tables_covers_all_synapses():
     g = random_graph(10, 12, 90, seed=13)
-    tables, _, _ = compile_snn(g, _hw(g), max_iters=4000)
+    tables = program_compile(g, _hw(g), max_iters=4000).tables
     lw = lower_tables(g, tables)
     assert lw.n_ops == g.n_synapses
     got = sorted(zip(lw.op_pre.tolist(),

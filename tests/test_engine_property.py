@@ -11,8 +11,8 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (HardwareConfig, compile_snn, random_graph,
-                        run_mapped, run_oracle)
+from repro.core import (HardwareConfig, compile as compile_program,
+                        random_graph, run_mapped, run_oracle)
 from repro.snn.lif import LIFIntParams
 
 
@@ -45,7 +45,7 @@ def graph_and_hw(draw):
 @settings(max_examples=25, deadline=None)
 def test_mapped_execution_bit_exact(case):
     g, hw, t, rate, ext_seed = case
-    tables, report, part = compile_snn(g, hw, seed=0, max_iters=4000)
+    tables = compile_program(g, hw, seed=0, max_iters=4000).tables
     rng = np.random.default_rng(ext_seed)
     ext = (rng.random((t, g.n_inputs)) < rate).astype(np.int32)
     s_ref, v_ref = run_oracle(g, ext)
@@ -63,8 +63,8 @@ def test_determinism_across_partition_seeds(case, pseed):
     g, hw, t, rate, ext_seed = case
     rng = np.random.default_rng(ext_seed)
     ext = (rng.random((t, g.n_inputs)) < rate).astype(np.int32)
-    t1, _, _ = compile_snn(g, hw, seed=0, max_iters=4000)
-    t2, _, _ = compile_snn(g, hw, seed=17 + pseed, max_iters=4000)
+    t1 = compile_program(g, hw, seed=0, max_iters=4000).tables
+    t2 = compile_program(g, hw, seed=17 + pseed, max_iters=4000).tables
     s1, v1, _ = run_mapped(g, t1, ext)
     s2, v2, _ = run_mapped(g, t2, ext)
     np.testing.assert_array_equal(s1, s2)

@@ -3,10 +3,15 @@ the single-step (decode) recurrence must compute the same function."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_reduced
 from repro.models.mamba2 import ssd_chunked, ssd_step
 from repro.models.rwkv import wkv6_chunked, wkv6_step
+
+
+# heavy chunked-vs-stepwise parity suite: full-suite CI job only
+pytestmark = pytest.mark.slow
 
 
 def test_wkv6_chunked_equals_stepwise():

@@ -1,0 +1,460 @@
+"""Tests for the scheduling subsystem (core/scheduling/).
+
+The load-bearing suite is PARITY: the vectorized array core must
+reproduce the preserved legacy loop bit-for-bit — tables,
+``send_slot``/``send_order``, and infeasibility assertion messages —
+across feedforward and recurrent graphs, partitioned and adversarial
+assignments, and injected send orders. On top ride the strategy
+registry, the joint (mapping, schedule) portfolio selection, its
+save/load round-trip, and the satellite fixes of this PR (memory-model
+Eq. 11 Spike Memory term, validator error paths, vectorized
+CycleModel/oracle packet counts).
+"""
+import numpy as np
+import pytest
+
+from conftest import make_ext
+from repro.core import (BASELINES, CycleModel, HardwareConfig, Program,
+                        SCHEDULE_STRATEGIES, SearchConfig,
+                        compile as compile_program, get_schedule_strategy,
+                        oracle_packet_counts, partition, random_graph,
+                        register_schedule_strategy, run_oracle, schedule,
+                        validate_schedule)
+from repro.core.memory_model import bram_count, total_memory_bits
+from repro.core.scheduling import (group_info, schedule_legacy,
+                                   schedule_vectorized)
+from repro.core.scheduling.strategies import SlackStrategy
+
+HW = HardwareConfig(n_spus=8, unified_mem_depth=64, concentration=3,
+                    max_neurons=256, max_post_neurons=128)
+
+
+def assert_tables_equal(a, b):
+    assert a.depth == b.depth
+    for f in ("pre", "post", "weight", "pre_end", "post_end", "assign"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+    assert a.send_slot == b.send_slot
+    assert list(a.send_slot) == list(b.send_slot)      # insertion order too
+    assert a.send_order == b.send_order
+
+
+# ---------------------------------------------------------------------------
+# Parity: vectorized core vs the preserved legacy loop.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_parity_recurrent_partitioned(seed):
+    g = random_graph(20, 40, 700, seed=seed)
+    res = partition(g, HW, seed=0, max_iters=20000)
+    a = schedule_legacy(g, res.assign, HW)
+    b = schedule_vectorized(g, res.assign, HW)
+    assert_tables_equal(a, b)
+    validate_schedule(g, b)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_parity_random_assignments(seed):
+    """Adversarial (unsearched) assignments hit imbalanced group shapes
+    the partitioner never produces."""
+    g = random_graph(16, 32, 600, seed=2)
+    rng = np.random.default_rng(seed)
+    for m in (2, 4, 8):
+        hw = HardwareConfig(n_spus=m, unified_mem_depth=4096,
+                            concentration=3, max_neurons=64,
+                            max_post_neurons=32)
+        assign = rng.integers(0, m, g.n_synapses).astype(np.int32)
+        a = schedule_legacy(g, assign, hw)
+        b = schedule_vectorized(g, assign, hw)
+        assert_tables_equal(a, b)
+        validate_schedule(g, b)
+
+
+def test_parity_feedforward_and_skewed():
+    """All synapses on few SPUs: deep tables, long backward fills."""
+    g = random_graph(24, 16, 380, seed=4)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    rng = np.random.default_rng(0)
+    assign = rng.choice([0, 5], g.n_synapses, p=[0.9, 0.1]).astype(np.int32)
+    a = schedule_legacy(g, assign, hw)
+    b = schedule_vectorized(g, assign, hw)
+    assert_tables_equal(a, b)
+    validate_schedule(g, b)
+
+
+def test_parity_under_injected_send_orders():
+    """Any permutation is feasible under the slot recurrence; the fill
+    must stay bit-exact for arbitrary strategy outputs."""
+    g = random_graph(12, 24, 400, seed=5)
+    rng = np.random.default_rng(1)
+    assign = rng.integers(0, HW.n_spus, g.n_synapses).astype(np.int32)
+    gi = group_info(g, assign)
+    for _ in range(4):
+        order = rng.permutation(gi.posts)
+        a = schedule_legacy(g, assign, HW, send_order=order)
+        b = schedule_vectorized(g, assign, HW, send_order=order)
+        assert_tables_equal(a, b)
+        validate_schedule(g, b)
+
+
+def test_parity_empty_graph():
+    g = random_graph(4, 4, 5, seed=0)
+    empty = type(g)(g.n_inputs, g.n_neurons, g.pre[:0], g.post[:0],
+                    g.weight[:0], g.lif, g.output_slice)
+    assign = np.zeros(0, np.int32)
+    a = schedule_legacy(empty, assign, HW)
+    b = schedule_vectorized(empty, assign, HW)
+    assert_tables_equal(a, b)
+    assert a.depth == 0
+
+
+def test_infeasibility_assertion_messages_match():
+    """Externally-injected (too tight) send slots overflow the backward
+    fill in BOTH implementations with the identical message."""
+    g = random_graph(10, 20, 150, seed=5)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=512, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, 4, g.n_synapses).astype(np.int32)
+    posts = group_info(g, assign).posts
+    slots = {int(q): i for i, q in enumerate(posts)}   # consecutive: too few
+    msgs = []
+    for fn in (schedule_legacy, schedule_vectorized):
+        with pytest.raises(AssertionError, match="schedule infeasible"):
+            try:
+                fn(g, assign, hw, send_slots=slots)
+            except AssertionError as exc:
+                msgs.append(str(exc))
+                raise
+    assert len(msgs) == 2 and msgs[0] == msgs[1]
+
+
+def test_vectorized_rejects_partial_send_order():
+    g = random_graph(8, 12, 80, seed=6)
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, HW.n_spus, g.n_synapses).astype(np.int32)
+    posts = group_info(g, assign).posts
+    with pytest.raises(ValueError, match="permutation"):
+        schedule_vectorized(g, assign, HW, send_order=posts[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry + compile(schedule_method=...).
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtins_slack_first():
+    assert list(SCHEDULE_STRATEGIES)[0] == "slack"   # wins joint ties
+    assert set(SCHEDULE_STRATEGIES) >= {"slack", "consecutive",
+                                        "load_balance"}
+
+
+def test_registry_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown schedule_method 'nope'"):
+        get_schedule_strategy("nope")
+    g = random_graph(8, 8, 40, seed=0)
+    with pytest.raises(ValueError, match="unknown schedule_method"):
+        compile_program(g, HW, schedule_method="nope")
+
+
+def test_register_schedule_strategy_replace_semantics():
+    with pytest.raises(ValueError, match="already registered"):
+        register_schedule_strategy(SlackStrategy())
+    custom = SlackStrategy(name="test_custom_order")
+    try:
+        register_schedule_strategy(custom)
+        assert get_schedule_strategy("test_custom_order") is custom
+    finally:
+        SCHEDULE_STRATEGIES.pop("test_custom_order", None)
+
+
+def test_custom_strategy_reaches_compile_and_stays_correct():
+    """A registered custom ordering flows through compile() and still
+    produces a valid, bit-exact-vs-oracle program."""
+    class ReverseStrategy:
+        name = "test_reverse"
+
+        def send_order(self, info):
+            return info.posts[::-1].copy()
+
+    g = random_graph(12, 16, 200, seed=7)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    try:
+        register_schedule_strategy(ReverseStrategy())
+        p = compile_program(g, hw, schedule_method="test_reverse",
+                            max_iters=3000)
+        assert p.report.schedule_method == "test_reverse"
+        assert p.tables.send_order == sorted(p.tables.send_order,
+                                             reverse=True)
+        ext = make_ext(g, 1, 8, seed=1)[0]
+        s, v, _ = p.run(ext, engine="python")
+        s_ref, v_ref = run_oracle(g, ext)
+        np.testing.assert_array_equal(s, s_ref)
+        np.testing.assert_array_equal(v, v_ref)
+    finally:
+        SCHEDULE_STRATEGIES.pop("test_reverse", None)
+
+
+@pytest.mark.parametrize("method", ["slack", "consecutive", "load_balance"])
+def test_compile_reaches_every_schedule_strategy(method):
+    g = random_graph(12, 16, 200, seed=7)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    p = compile_program(g, hw, schedule_method=method, max_iters=3000)
+    assert p.report.schedule_method == method
+    assert p.report.schedule_depths == {method: p.ot_depth}
+    validate_schedule(g, p.tables)
+    # every strategy executes bit-exactly (order changes slots, not math)
+    ext = make_ext(g, 1, 6, seed=2)[0]
+    s, _, _ = p.run(ext, engine="python")
+    np.testing.assert_array_equal(s, run_oracle(g, ext)[0])
+
+
+def test_slack_strategy_is_the_legacy_order():
+    g = random_graph(16, 32, 500, seed=7)
+    res = partition(g, HW, seed=0)
+    assert_tables_equal(schedule(g, res.assign, HW, method="slack"),
+                        schedule_legacy(g, res.assign, HW))
+
+
+def test_compile_rejects_schedule_method_alongside_search():
+    g = random_graph(12, 24, 300, seed=3)
+    with pytest.raises(ValueError, match="SearchConfig"):
+        compile_program(g, HW, schedule_method="consecutive",
+                        search=SearchConfig(restarts=2))
+
+
+# ---------------------------------------------------------------------------
+# Joint (mapping, schedule strategy) portfolio selection.
+# ---------------------------------------------------------------------------
+
+def _joint_instance():
+    """A config where the strategies disagree on the best candidate, so
+    joint selection strictly beats slack-only selection (the benchmark's
+    acceptance scenario, pinned here as a regression)."""
+    g = random_graph(24, 48, 2000, seed=0)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=40, concentration=3,
+                        max_neurons=128, max_post_neurons=64)
+    return g, hw
+
+
+@pytest.fixture(scope="module")
+def joint_program():
+    g, hw = _joint_instance()
+    return g, hw, compile_program(g, hw, search=SearchConfig(
+        restarts=4, max_iters=20000, early_exit=False))
+
+
+def test_joint_selection_beats_best_single_strategy(joint_program):
+    g, hw, p = joint_program
+    trace = p.report.search
+    feas = [c for c in trace.candidates if c.feasible]
+    assert feas
+    # every feasible candidate was scored under every registered strategy
+    for c in feas:
+        assert set(c.schedule_depths) == set(SCHEDULE_STRATEGIES)
+        assert c.ot_depth == min(c.schedule_depths.values())
+        assert c.schedule_depths[c.schedule_method] == c.ot_depth
+    best_slack = min(c.schedule_depths["slack"] for c in feas)
+    assert p.ot_depth < best_slack, \
+        "joint (mapping, strategy) selection must beat slack-only here"
+    assert p.report.schedule_method != "slack"
+    assert p.report.schedule_depths == trace.selected.schedule_depths
+    validate_schedule(g, p.tables)
+
+
+def test_joint_winner_minimizes_over_pairs(joint_program):
+    _, _, p = joint_program
+    trace = p.report.search
+    feas = [c for c in trace.candidates if c.feasible]
+    assert p.ot_depth == min(min(c.schedule_depths.values()) for c in feas)
+    sel = trace.selected
+    assert sel.feasible and sel.ot_depth == p.ot_depth
+
+
+def test_joint_choice_roundtrips_through_artifact(tmp_path, joint_program):
+    _, _, p = joint_program
+    loaded = Program.load(p.save(tmp_path / "joint"))
+    assert loaded.report.schedule_method == p.report.schedule_method
+    assert loaded.report.schedule_depths == p.report.schedule_depths
+    a, b = p.report.search, loaded.report.search
+    assert [c.schedule_method for c in a.candidates] == \
+           [c.schedule_method for c in b.candidates]
+    assert [c.schedule_depths for c in a.candidates] == \
+           [c.schedule_depths for c in b.candidates]
+    assert b.selected.schedule_method == a.selected.schedule_method
+    np.testing.assert_array_equal(loaded.tables.pre, p.tables.pre)
+
+
+def test_plain_compile_records_schedule_choice_roundtrip(tmp_path):
+    g = random_graph(12, 16, 200, seed=7)
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    p = compile_program(g, hw, schedule_method="load_balance",
+                        max_iters=3000)
+    loaded = Program.load(p.save(tmp_path / "lb"))
+    assert loaded.report.schedule_method == "load_balance"
+    assert loaded.report.schedule_depths == {"load_balance": p.ot_depth}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: memory model Eq. (11) Spike Memory reconciliation.
+# ---------------------------------------------------------------------------
+
+def test_total_memory_bits_includes_spike_memory():
+    """Eq. (11) and the BRAM packing model must agree about what memory
+    exists: both count routing, M x (OT + UM + Spike Memory), and the
+    Neuron State SRAM. Pinned at the Table 2 MNIST point and a second
+    (SHD-flavored) point."""
+    mnist = HardwareConfig(n_spus=16, unified_mem_depth=128, concentration=3,
+                           weight_bits=4, potential_bits=5, max_neurons=910,
+                           max_post_neurons=126)
+    # by hand: ot_entry = 2*7 + 2 + 10 + 2 = 28; routing = 910*16
+    # per SPU: OT 661*28 + UM 3*4*128 + spike 910; NU 126*(10+12-7+1)
+    expect = 910 * 16 + 16 * (661 * 28 + 1536 + 910) + 126 * 16
+    assert total_memory_bits(mnist, 661) == expect
+    shd = HardwareConfig(n_spus=16, unified_mem_depth=120, concentration=3,
+                         weight_bits=9, potential_bits=18, max_neurons=1020,
+                         max_post_neurons=320)
+    # ot_entry = 2*7 + 2 + 10 + 2 = 28; UM = 3*9*120; NU = 320*(10+27-9+1)
+    expect = 1020 * 16 + 16 * (2000 * 28 + 3240 + 1020) + 320 * 29
+    assert total_memory_bits(shd, 2000) == expect
+
+
+def test_memory_and_bram_models_cover_same_structures():
+    """Growing max_neurons by one 18Kb-BRAM's worth of spike bits moves
+    BOTH reports — before the fix only bram_count saw Spike Memory."""
+    base = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                          max_neurons=600, max_post_neurons=126)
+    # +300 neurons within one log2 bucket (no entry-width change):
+    # routing grows 300*M bits and Spike Memory grows M*300 bits
+    big = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                         max_neurons=900, max_post_neurons=126)
+    d_bits = total_memory_bits(big, 100) - total_memory_bits(base, 100)
+    assert d_bits == 300 * 4 + 4 * 300   # routing growth + spike growth
+    assert bram_count(big, 100) >= bram_count(base, 100)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: validator error paths.
+# ---------------------------------------------------------------------------
+
+def _valid_tables():
+    g = random_graph(16, 32, 400, seed=9)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    res = BASELINES["synapse_rr"](g, hw)
+    return g, schedule(g, res.assign, hw)
+
+
+def test_validator_post_missing_from_send_slot_is_assertion():
+    """Invariant (b) with a post absent from send_slot must raise the
+    intended AssertionError (expected slot -1), not a KeyError from
+    inside the message formatting."""
+    g, tables = _valid_tables()
+    pq = tables.send_order[0]
+    del tables.send_slot[pq]
+    with pytest.raises(AssertionError,
+                       match=f"post {pq} sent at \\d+ != slot -1"):
+        validate_schedule(g, tables)
+
+
+def test_validator_send_slot_mismatch_message():
+    g, tables = _valid_tables()
+    pq = tables.send_order[0]
+    tables.send_slot[pq] += 1
+    with pytest.raises(AssertionError, match=f"post {pq} sent at"):
+        validate_schedule(g, tables)
+
+
+def test_validator_late_op_message():
+    """Invariant (c) now names the offending (post, SPU, slot)."""
+    g, tables = _valid_tables()
+    # move a non-Post-End op of the FIRST-sending post to a free later
+    # slot: multiset (a) and alignment (b) stay intact, (c) trips
+    moved = False
+    for pq in tables.send_order:
+        t_p = tables.send_slot[pq]
+        for spu in range(tables.n_spus):
+            ops = np.flatnonzero((tables.post[spu] == pq)
+                                 & ~tables.post_end[spu])
+            free = np.flatnonzero(tables.pre[spu] == -1)
+            free = free[free > t_p]
+            if len(ops) and len(free):
+                a, b = int(ops[0]), int(free[0])
+                for arr in (tables.pre, tables.post, tables.weight):
+                    arr[spu, b] = arr[spu, a]
+                    arr[spu, a] = -1 if arr is not tables.weight else 0
+                tables.pre_end[spu, b] = tables.pre_end[spu, a]
+                tables.pre_end[spu, a] = False
+                moved = True
+                break
+        if moved:
+            break
+    assert moved, "instance left no room to build the violation"
+    with pytest.raises(AssertionError, match="after its send slot"):
+        validate_schedule(g, tables)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized CycleModel + oracle packet counts.
+# ---------------------------------------------------------------------------
+
+def _loop_cycle_report(cm, packet_counts, ot_depth, n_syn):
+    """The pre-vectorization per-timestep loop, kept as the reference."""
+    dist = syn = over = 0
+    for n in packet_counts:
+        a, b, c = cm.timestep_cycles(int(n), ot_depth)
+        dist += a
+        syn += b
+        over += c
+    total = dist + syn + over
+    lat_us = total / cm.hw.clock_mhz
+    p = cm.power.total_w(cm.hw)
+    e_mj = p * lat_us * 1e-3
+    return total, dist, syn, over, lat_us, p, e_mj, e_mj * 1e6 / n_syn
+
+
+def test_cycle_model_bit_identical_to_loop():
+    hw = HardwareConfig(n_spus=16, unified_mem_depth=128, concentration=3,
+                        max_neurons=910, max_post_neurons=126)
+    cm = CycleModel(hw)
+    rng = np.random.default_rng(0)
+    for t_steps in (1, 7, 50):
+        pkts = rng.integers(0, 300, t_steps)
+        rep = cm.run(pkts, 661, 92604)
+        ref = _loop_cycle_report(cm, pkts, 661, 92604)
+        assert (rep.cycles_total, rep.cycles_distribution,
+                rep.cycles_synaptic, rep.cycles_overhead) == ref[:4]
+        assert rep.latency_us == ref[4] and rep.energy_mj == ref[6]
+        assert rep.energy_per_synapse_nj == ref[7]
+
+
+def test_cycle_model_rejects_batched_counts():
+    hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    with pytest.raises(ValueError, match=r"1-D \[T\]"):
+        CycleModel(hw).run(np.ones((3, 10), np.int64), 50, 100)
+
+
+def test_oracle_packet_counts_match_loop_and_batch():
+    g = random_graph(10, 14, 120, seed=1)
+    ext = make_ext(g, 3, 9, seed=2)
+    singles = []
+    for b in range(3):
+        s, _ = run_oracle(g, ext[b])
+        # reference loop (the pre-vectorization implementation)
+        ref = np.zeros(ext.shape[1], np.int64)
+        for t in range(ext.shape[1]):
+            prev = np.count_nonzero(s[t - 1]) if t else 0
+            ref[t] = np.count_nonzero(ext[b, t]) + prev
+        got = oracle_packet_counts(ext[b], s)
+        np.testing.assert_array_equal(got, ref)
+        singles.append((s, got))
+    batched = oracle_packet_counts(ext, np.stack([s for s, _ in singles]))
+    assert batched.shape == (3, 9)
+    for b in range(3):
+        np.testing.assert_array_equal(batched[b], singles[b][1])
+    with pytest.raises(ValueError, match="matching"):
+        oracle_packet_counts(ext[0, 0], np.zeros(3))

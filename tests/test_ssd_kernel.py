@@ -19,6 +19,10 @@ def _case(b, s, h, p, n, seed=0):
     return x, dt, a_log, bb, cc, st
 
 
+# heavy chunked-vs-stepwise parity suite: full-suite CI job only
+pytestmark = pytest.mark.slow
+
+
 @pytest.mark.parametrize("b,s,h,p,n", [(1, 8, 1, 4, 8), (2, 29, 3, 4, 8),
                                        (1, 64, 2, 16, 16)])
 def test_ssd_kernel_matches_stepwise(b, s, h, p, n):

@@ -3,7 +3,8 @@ schedule -> execute, plus cycle/energy model sanity against Table 2/3."""
 import numpy as np
 import pytest
 
-from repro.core import (CycleModel, HardwareConfig, compile_snn, from_quantized,
+from repro.core import (CycleModel, HardwareConfig,
+                        compile as compile_program, from_quantized,
                         random_graph, run_mapped, run_oracle)
 from repro.configs.snn_paper import MNIST_HW
 from repro.snn import MNIST_CONFIG, QuantConfig, init_params, quantize
@@ -15,7 +16,8 @@ def test_end_to_end_random_graph():
     g = random_graph(24, 48, 400, seed=3)
     hw = HardwareConfig(n_spus=8, unified_mem_depth=48, concentration=3,
                         max_neurons=128, max_post_neurons=64)
-    tables, report, part = compile_snn(g, hw, seed=1)
+    program = compile_program(g, hw, seed=1)
+    tables, report = program.tables, program.report
     assert report.feasible
     rng = np.random.default_rng(0)
     ext = (rng.random((20, g.n_inputs)) < 0.25).astype(np.int32)
@@ -34,8 +36,8 @@ def test_mnist_network_maps_onto_paper_hardware():
     g = from_quantized(q)
     # post-quantization sparsity should exceed the pre-quantization level
     assert q.sparsity > 0.5
-    tables, report, part = compile_snn(g, MNIST_HW, seed=0,
-                                       max_iters=30000)
+    program = compile_program(g, MNIST_HW, seed=0, max_iters=30000)
+    tables, report = program.tables, program.report
     assert report.feasible, f"scores {report.scores.min()}"
     # schedule depth within the same order as the paper's 661
     assert report.ot_depth < 5 * 661
@@ -74,7 +76,7 @@ def test_merge_alignment_violation_detected():
     g = random_graph(10, 20, 150, seed=5)
     hw = HardwareConfig(n_spus=4, unified_mem_depth=64, concentration=3,
                         max_neurons=64, max_post_neurons=32)
-    tables, report, part = compile_snn(g, hw, seed=0)
+    tables = compile_program(g, hw, seed=0).tables
     m, depth = tables.pre.shape
     moved = False
     for spu in range(m):

@@ -19,6 +19,10 @@ def _case(b, s, h, n, dtype=jnp.float32, seed=0):
     return r, k, v, w, u, st
 
 
+# heavy chunked-vs-stepwise parity suite: full-suite CI job only
+pytestmark = pytest.mark.slow
+
+
 @pytest.mark.parametrize("b,s,h,n", [(1, 8, 1, 8), (2, 37, 3, 8),
                                      (2, 64, 2, 16), (1, 129, 4, 32)])
 def test_wkv6_matches_ref(b, s, h, n):

@@ -28,13 +28,15 @@ MODULES = [
     "benchmarks.kernel_benchmarks",       # Pallas kernel structure
     "benchmarks.partitioner_throughput",  # mapping-subsystem speedup
     "benchmarks.scheduler_throughput",    # scheduling-subsystem speedup
+    "benchmarks.serving_throughput",      # serving-subsystem smoke
     "benchmarks.roofline_table",          # §Roofline aggregation
 ]
 
 
 SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
                  "benchmarks.partitioner_throughput",
-                 "benchmarks.scheduler_throughput"]
+                 "benchmarks.scheduler_throughput",
+                 "benchmarks.serving_throughput"]
 
 
 def main() -> None:

@@ -1,32 +1,34 @@
-"""Micro-batching SNN serving loop over a loaded `Program` artifact —
-the save-once / serve-many flow the artifact API exists for.
+"""Micro-batching SNN serving CLI — a thin driver over `repro.serve`.
 
     PYTHONPATH=src python examples/serve_snn.py [--artifact PATH]
-        [--requests 64] [--batch-max 8] [--arrival-us 300]
+        [--requests 64] [--batch-max 8] [--max-wait-us 0]
+        [--arrival-us 300] [--seed 0] [--sharded] [--measured]
 
 One process compiles (partition + schedule, the expensive stochastic
 part) and saves the artifact; every serving process just `Program.load`s
-it — no re-partitioning — and drives the compiled batched engine:
+it — no re-partitioning — registers it, and drains a Poisson request
+stream through the library micro-batcher
+(`repro.serve.batcher.MicroBatcher`): FIFO queue, power-of-two batch
+buckets, pad-and-mask, per-request latency accounting on a simulated
+microsecond clock.
 
-  1. requests (single spike trains, Poisson arrivals) land in a queue;
-  2. the server drains up to --batch-max of them, PADS the batch up to
-     the next power-of-two bucket (so XLA compiles one program per
-     bucket, not per batch size), and runs them in one engine call;
-  3. per-request latency = queue wait + batch service time.
-
-Service times are real wall-clock engine calls; arrivals advance a
-simulated clock so the demo is deterministic and sleep-free. Reports
-p50/p99 latency, throughput, and the bucket histogram.
+Request spike trains AND Poisson arrivals come from ONE
+`np.random.Generator(--seed)`, and service times default to the
+deterministic linear model — so two runs with the same seed report
+identical p50/p99 (asserted in tests/test_serving.py). `--measured`
+swaps in real wall-clock engine times; `--sharded` runs each batch
+data-parallel over every jax device (`repro.serve.sharded`).
 """
 from __future__ import annotations
 
 import argparse
-import time
 from pathlib import Path
 
 import numpy as np
 
 from repro.core import HardwareConfig, Program, compile, random_graph
+from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
+                         linear_service_model)
 
 
 def build_artifact(path: Path) -> Path:
@@ -42,82 +44,57 @@ def build_artifact(path: Path) -> Path:
     return program.save(path)
 
 
-def bucket_of(n: int, batch_max: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return min(b, batch_max)
-
-
-def serve(program: Program, requests: np.ndarray, arrivals: np.ndarray,
-          batch_max: int) -> tuple[np.ndarray, dict[int, int]]:
-    """Drain the arrival queue in micro-batches; return latencies (us)."""
-    t_steps, n_in = requests.shape[1], requests.shape[2]
-    # warm up one engine compilation per reachable bucket size:
-    # powers of two below batch_max, plus batch_max itself (bucket_of
-    # caps there, so a non-power-of-two max is its own bucket)
-    sizes = {b for k in range(batch_max.bit_length())
-             if (b := 2 ** k) < batch_max} | {batch_max}
-    for b in sorted(sizes):
-        program.run(np.zeros((b, t_steps, n_in), np.int32))
-
-    latencies = np.zeros(len(requests))
-    buckets: dict[int, int] = {}
-    clock = 0.0                       # simulated us
-    i = 0
-    while i < len(requests):
-        clock = max(clock, arrivals[i])          # wait for work
-        n = 1                                    # drain what has arrived
-        while (i + n < len(requests) and n < batch_max
-               and arrivals[i + n] <= clock):
-            n += 1
-        bucket = bucket_of(n, batch_max)
-        batch = requests[i:i + n]
-        if len(batch) < bucket:                  # pad to the bucket shape
-            pad = np.zeros((bucket - len(batch), t_steps, n_in), np.int32)
-            batch = np.concatenate([batch, pad])
-        t0 = time.perf_counter()
-        program.run(batch)
-        service_us = (time.perf_counter() - t0) * 1e6
-        clock += service_us
-        latencies[i:i + n] = clock - arrivals[i:i + n]
-        buckets[bucket] = buckets.get(bucket, 0) + 1
-        i += n
-    return latencies, buckets
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--artifact", default="/tmp/suprasnn_serve_demo.npz")
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch-max", type=int, default=8)
-    ap.add_argument("--timesteps", type=int, default=20)
-    ap.add_argument("--arrival-us", type=float, default=300.0,
-                    help="mean Poisson inter-arrival time")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def run_demo(args) -> dict:
+    """Load -> register -> drain the seeded stream; return the metrics."""
     path = Path(args.artifact)
     if path.suffix != ".npz":          # Program.save appends .npz
         path = path.with_name(path.name + ".npz")
     if not path.exists():
         path = build_artifact(path)
-    program = Program.load(path)      # no re-partitioning here
+    registry = ProgramRegistry()
+    program: Program = registry.load("demo", path)  # no re-partitioning
     print(f"loaded {path.name}: {program.n_synapses} synapses on "
           f"{program.hw.n_spus} SPUs, OT depth {program.ot_depth}")
 
+    # ONE generator drives both the spike trains and the arrival process
     rng = np.random.default_rng(args.seed)
     reqs = (rng.random((args.requests, args.timesteps, program.n_inputs))
             < 0.25).astype(np.int32)
     arrivals = np.cumsum(rng.exponential(args.arrival_us, args.requests))
 
-    lat, buckets = serve(program, reqs, arrivals, args.batch_max)
-    p50, p99 = np.percentile(lat, [50, 99])
-    span_s = (arrivals[-1] + lat[-1]) / 1e6
-    print(f"served {args.requests} requests, batch buckets "
-          f"{dict(sorted(buckets.items()))}")
-    print(f"latency p50 {p50 / 1e3:.2f} ms  p99 {p99 / 1e3:.2f} ms  "
-          f"throughput {args.requests / span_s:.0f} req/s")
+    policy = BatchPolicy(max_batch=args.batch_max,
+                         max_wait_us=args.max_wait_us)
+    runner = registry.runner("demo", sharded=args.sharded)
+    batcher = MicroBatcher(
+        policy, runner=runner,
+        service_model=None if args.measured else linear_service_model())
+    res = batcher.drain(arrivals, reqs)
+    m = res.metrics()
+    print(f"served {m['requests']} requests in {m['batches']} batches, "
+          f"buckets {dict(sorted(m['buckets'].items()))}")
+    print(f"latency p50 {m['p50_ms']:.2f} ms  p99 {m['p99_ms']:.2f} ms  "
+          f"throughput {m['throughput_rps']:.0f} req/s")
+    return m
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default="/tmp/suprasnn_serve_demo.npz")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch-max", type=int, default=8)
+    ap.add_argument("--max-wait-us", type=float, default=0.0)
+    ap.add_argument("--timesteps", type=int, default=20)
+    ap.add_argument("--arrival-us", type=float, default=300.0,
+                    help="mean Poisson inter-arrival time")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="one np.random.Generator seed for spike trains "
+                         "AND arrivals: same seed, same p50/p99")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run batches data-parallel over all jax devices")
+    ap.add_argument("--measured", action="store_true",
+                    help="use wall-clock engine times instead of the "
+                         "deterministic linear service model")
+    return run_demo(ap.parse_args(argv))
 
 
 if __name__ == "__main__":

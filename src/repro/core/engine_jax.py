@@ -52,6 +52,36 @@ from repro.kernels.ops import _default_interpret
 from repro.snn.lif import LIFIntParams, lif_step_int
 
 
+def normalize_ext_spikes(ext_spikes, n_inputs: int
+                         ) -> tuple[np.ndarray, bool]:
+    """Validate a spike train (batch) into ``[B, T, n_inputs]`` form.
+
+    Returns ``(ext, squeeze)`` where ``squeeze`` records that a 2-D
+    ``[T, n_inputs]`` input was promoted and the outputs should drop
+    the batch dim again. Shared by the single-device engine and the
+    sharded runner so validation cannot drift between them.
+    """
+    ext = np.asarray(ext_spikes)
+    squeeze = ext.ndim == 2
+    if squeeze:
+        ext = ext[None]
+    if ext.ndim != 3 or ext.shape[2] != n_inputs:
+        raise ValueError(f"ext_spikes shape {np.shape(ext_spikes)} != "
+                         f"[B, T, {n_inputs}] or [T, {n_inputs}]")
+    return ext, squeeze
+
+
+def finalize_outputs(spikes, v, pkts, squeeze: bool
+                     ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Device arrays -> the uniform ``(spikes, v_final, stats)`` tuple."""
+    spikes = np.asarray(spikes, np.int32)
+    v = np.asarray(v, np.int32)
+    pkts = np.asarray(pkts, np.int64)
+    if squeeze:
+        spikes, v, pkts = spikes[0], v[0], pkts[0]
+    return spikes, v, packet_stats(pkts)
+
+
 class JaxMappedEngine:
     """A mapped program compiled for batched execution.
 
@@ -73,7 +103,16 @@ class JaxMappedEngine:
             interpret = _default_interpret()
         self._nu_kernel = nu_kernel
         self._interpret = interpret
-        self._run = jax.jit(self._build())
+        self._fn = self._build()
+        self._run = jax.jit(self._fn)
+
+    @property
+    def step_fn(self):
+        """The uncompiled ``(ext [B,T,in], v0, s0) -> (spikes, v, pkts)``
+        program — :mod:`repro.serve.sharded` wraps it in ``shard_map``
+        over a device mesh before jitting, so the sharded executor runs
+        the byte-identical computation per shard."""
+        return self._fn
 
     # -- compiled program ---------------------------------------------------
 
@@ -125,23 +164,12 @@ class JaxMappedEngine:
         batch dimension the leading B is kept ([B, T, n_int] / [B, n_int]
         / [B, T]).
         """
-        ext = np.asarray(ext_spikes)
-        squeeze = ext.ndim == 2
-        if squeeze:
-            ext = ext[None]
-        if ext.ndim != 3 or ext.shape[2] != self.lowered.n_inputs:
-            raise ValueError(f"ext_spikes shape {np.shape(ext_spikes)} != "
-                             f"[B, T, {self.lowered.n_inputs}]")
-        b = ext.shape[0]
-        n_int = self.lowered.n_internal
-        zeros = jnp.zeros((b, n_int), jnp.int32)
+        ext, squeeze = normalize_ext_spikes(ext_spikes,
+                                            self.lowered.n_inputs)
+        zeros = jnp.zeros((ext.shape[0], self.lowered.n_internal),
+                          jnp.int32)
         spikes, v, pkts = self._run(jnp.asarray(ext, jnp.int32), zeros, zeros)
-        spikes = np.asarray(spikes, np.int32)
-        v = np.asarray(v, np.int32)
-        pkts = np.asarray(pkts, np.int64)
-        if squeeze:
-            spikes, v, pkts = spikes[0], v[0], pkts[0]
-        return spikes, v, packet_stats(pkts)
+        return finalize_outputs(spikes, v, pkts, squeeze)
 
 
 # -- deprecated convenience entry point -------------------------------------

@@ -155,10 +155,30 @@ class Program:
             self._engines[key] = eng
         return eng
 
+    def sharded_runner(self, mesh=None, *, nu_kernel: bool = True,
+                       interpret: bool | None = None):
+        """The owned multi-device runner for these build options.
+
+        Wraps the owned engine in ``shard_map`` over ``mesh`` (default:
+        every device on the ``data`` axis) — see
+        :mod:`repro.serve.sharded`. Runners are cached like engines:
+        same (mesh, resolved build options) -> same object.
+        """
+        from repro.serve.sharded import ShardedRunner
+        key = ("sharded", mesh, bool(nu_kernel),
+               _default_interpret() if interpret is None else bool(interpret))
+        runner = self._engines.get(key)
+        if runner is None:
+            runner = ShardedRunner(self, mesh, nu_kernel=nu_kernel,
+                                   interpret=interpret)
+            self._engines[key] = runner
+        return runner
+
     # -- execution ----------------------------------------------------------
 
     def run(self, ext_spikes: np.ndarray, *, engine: str | None = None,
-            nu_kernel: bool = True, interpret: bool | None = None
+            nu_kernel: bool = True, interpret: bool | None = None,
+            sharded: bool = False, mesh=None
             ) -> tuple[np.ndarray, np.ndarray, dict]:
         """Execute the program on a spike train (batch).
 
@@ -169,8 +189,20 @@ class Program:
         ``(spikes, v_final, stats)`` with matching shapes —
         ``[T, n_internal]`` / ``[n_internal]`` / packet_counts ``[T]``,
         batched with a leading ``B`` — and identical bits.
+
+        ``sharded=True`` data-parallelizes the batch axis over a jax
+        mesh (``mesh``, default every device on ``data``) through the
+        owned :class:`~repro.serve.sharded.ShardedRunner` — jax engine
+        only, outputs bit-exact vs the single-device run (ragged
+        batches pad-and-mask).
         """
-        engine = engine or self.default_engine
+        engine = engine or ("jax" if sharded else self.default_engine)
+        if sharded:
+            if engine != "jax":
+                raise ValueError(f"sharded=True runs the jax engine; got "
+                                 f"engine={engine!r}")
+            return self.sharded_runner(mesh, nu_kernel=nu_kernel,
+                                       interpret=interpret).run(ext_spikes)
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; use one of "
                              f"{ENGINES}")

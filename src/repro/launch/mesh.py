@@ -31,3 +31,15 @@ def make_debug_mesh(n_devices: int | None = None, *, model: int = 2):
     model = min(model, n)
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(n_devices: int | None = None):
+    """All (possibly forced-host) devices on the ``data`` axis.
+
+    The serving subsystem (:mod:`repro.serve.sharded`) is pure data
+    parallelism — the request batch axis shards over ``data`` and the
+    mapped program is replicated — so the model axis stays at 1. Axis
+    names match the debug/production meshes, and CPU CI gets >= 8
+    shards via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    return make_debug_mesh(n_devices, model=1)

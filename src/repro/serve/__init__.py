@@ -1,0 +1,21 @@
+# SupraSNN serving subsystem: a loaded Program artifact as a
+# first-class, multi-device service.
+#   sharded    shard_map data parallelism over a jax mesh (pad-and-mask
+#              ragged batches; bit-exact vs the single-device engine)
+#   batcher    deterministic micro-batcher (simulated clock, BatchPolicy,
+#              pow2 buckets, per-request latency accounting)
+#   registry   N loaded Programs by name, per-model engine ownership
+#   server     request streams -> per-model queues -> metrics dict
+from repro.serve.batcher import (BatchPolicy, BatchRecord, DrainResult,
+                                 MicroBatcher, latency_metrics,
+                                 linear_service_model)
+from repro.serve.registry import ProgramRegistry
+from repro.serve.server import Request, Server
+from repro.serve.sharded import ShardedRunner, sharded_runner
+
+__all__ = [
+    "BatchPolicy", "BatchRecord", "DrainResult", "MicroBatcher",
+    "latency_metrics", "linear_service_model",
+    "ProgramRegistry", "Request", "Server",
+    "ShardedRunner", "sharded_runner",
+]

@@ -1,0 +1,268 @@
+"""Library micro-batcher: the queue / pow2-bucket / drain logic that
+used to live as demo code inside ``examples/serve_snn.py``.
+
+The batcher is a *deterministic simulation* of a single-threaded
+serving loop. Time is a simulated microsecond clock — arrivals come
+from the caller, service times come from an explicit ``service_model``
+(or, when none is given, from measuring the real engine call) — so
+identical inputs always produce identical per-request latencies, which
+is what makes the queue semantics property-testable.
+
+Semantics (:class:`BatchPolicy`):
+
+* requests are served strictly FIFO — a batch is always a contiguous
+  run of the arrival-ordered queue;
+* a batch **dispatches** when it is full (``max_batch`` requests) or
+  when the oldest queued request has waited ``max_wait_us`` (with
+  ``max_wait_us=0`` the batcher drains whatever has arrived, the
+  original demo behavior);
+* the real batch size is rounded up to the next **bucket** (default:
+  powers of two capped at ``max_batch``) and padded with all-zero
+  samples, so XLA compiles one program per bucket, not per batch size;
+* the engine is serially busy: the next batch cannot dispatch before
+  the previous one completes.
+
+Per-request accounting lands in :class:`DrainResult` — dispatch /
+completion / latency per request plus a :class:`BatchRecord` per
+engine call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """When to dispatch, and which padded batch shapes exist.
+
+    max_batch: most requests per engine call.
+    max_wait_us: how long the oldest queued request may wait for the
+        batch to fill before dispatching anyway (0 = never hold).
+    buckets: allowed padded batch sizes, ascending; defaults to the
+        powers of two below ``max_batch`` plus ``max_batch`` itself.
+    """
+    max_batch: int = 8
+    max_wait_us: float = 0.0
+    buckets: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_us < 0:
+            raise ValueError(
+                f"max_wait_us must be >= 0, got {self.max_wait_us}")
+        buckets = tuple(int(b) for b in self.buckets)
+        if not buckets:
+            buckets = tuple(b for k in range(self.max_batch.bit_length())
+                            if (b := 2 ** k) < self.max_batch)
+            buckets += (self.max_batch,)
+        if list(buckets) != sorted(set(buckets)) or buckets[0] < 1:
+            raise ValueError(f"buckets must be ascending unique positive "
+                             f"ints, got {buckets}")
+        if buckets[-1] < self.max_batch:
+            raise ValueError(f"largest bucket {buckets[-1]} cannot hold a "
+                             f"full batch of {self.max_batch}")
+        object.__setattr__(self, "buckets", buckets)
+
+    def bucket_of(self, n: int) -> int:
+        """Smallest allowed padded size holding ``n`` requests."""
+        if not 1 <= n <= self.max_batch:
+            raise ValueError(f"batch of {n} outside [1, {self.max_batch}]")
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise AssertionError("unreachable: buckets[-1] >= max_batch")
+
+
+def linear_service_model(base_us: float = 200.0,
+                         per_sample_us: float = 25.0):
+    """Deterministic service-time model ``base + per_sample * bucket``.
+
+    Used wherever reproducible latencies matter (the seeded example,
+    smoke tests); swap in ``service_model=None`` to measure the real
+    engine call instead.
+    """
+    def model(bucket: int) -> float:
+        return base_us + per_sample_us * bucket
+    return model
+
+
+def latency_metrics(latencies_us: np.ndarray,
+                    completion_us: np.ndarray) -> dict:
+    """p50/p99/mean latency (ms) + simulated throughput (req/s) — the
+    one definition shared by per-model and total metrics."""
+    if not len(latencies_us):
+        return {"requests": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                "mean_ms": 0.0, "throughput_rps": 0.0}
+    arrivals = completion_us - latencies_us
+    span_s = max(float(completion_us.max() - arrivals.min()), 1e-9) / 1e6
+    p50, p99 = np.percentile(latencies_us, [50, 99])
+    return {
+        "requests": int(len(latencies_us)),
+        "p50_ms": float(p50) / 1e3,
+        "p99_ms": float(p99) / 1e3,
+        "mean_ms": float(latencies_us.mean()) / 1e3,
+        "throughput_rps": len(latencies_us) / span_s,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    """One engine call: requests [first, first+size) padded to bucket."""
+    first: int
+    size: int
+    bucket: int
+    dispatch_us: float
+    service_us: float
+    completion_us: float
+
+
+@dataclasses.dataclass
+class DrainResult:
+    """Per-request accounting plus optional engine outputs."""
+    latencies_us: np.ndarray          # [N]
+    dispatch_us: np.ndarray           # [N] when the request's batch left
+    completion_us: np.ndarray         # [N] arrival + latency
+    batch_index: np.ndarray           # [N] which BatchRecord served it
+    batches: list[BatchRecord]
+    outputs: tuple | None = None      # (spikes [N,T,·], v [N,·], pkts [N,T])
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.latencies_us)
+
+    def bucket_histogram(self) -> dict[int, int]:
+        hist: dict[int, int] = {}
+        for b in self.batches:
+            hist[b.bucket] = hist.get(b.bucket, 0) + 1
+        return hist
+
+    def metrics(self) -> dict:
+        """:func:`latency_metrics` plus batch/bucket accounting; the
+        key set is stable, including for an empty drain."""
+        m = latency_metrics(self.latencies_us, self.completion_us)
+        m["batches"] = len(self.batches)
+        m["buckets"] = self.bucket_histogram()
+        return m
+
+
+class MicroBatcher:
+    """Drain an arrival-ordered request queue in padded micro-batches.
+
+    runner: callable ``[b, T, n_in] -> (spikes, v, stats)`` — e.g.
+        ``program.run`` or ``ShardedRunner.run``; ``None`` simulates
+        the queue without executing anything (pure policy tests).
+    service_model: callable ``bucket -> service_us``; ``None`` measures
+        the wall clock of each runner call (requires a runner).
+    """
+
+    def __init__(self, policy: BatchPolicy | None = None, *,
+                 runner=None, service_model=None):
+        self.policy = policy or BatchPolicy()
+        self.runner = runner
+        self.service_model = service_model
+        if runner is None and service_model is None:
+            raise ValueError("need a service_model when there is no runner "
+                             "to measure (simulation-only batcher)")
+
+    # -- queue simulation ---------------------------------------------------
+
+    def _admit(self, arrivals: np.ndarray, i: int, clock: float
+               ) -> tuple[int, float]:
+        """How many requests join the batch starting at ``i``, and when
+        the batch dispatches (full, or the oldest waited out)."""
+        pol = self.policy
+        n_total = len(arrivals)
+        t0 = max(clock, float(arrivals[i]))      # oldest request ready
+        horizon = (max(t0, float(arrivals[i]) + pol.max_wait_us)
+                   if pol.max_wait_us > 0 else t0)
+        n = 1
+        while (n < pol.max_batch and i + n < n_total
+               and arrivals[i + n] <= horizon):
+            n += 1
+        if n == pol.max_batch:                   # full: leave immediately
+            dispatch = max(t0, float(arrivals[i + n - 1]))
+        else:                                    # waited out the window
+            dispatch = horizon
+        return n, dispatch
+
+    # -- public API ---------------------------------------------------------
+
+    def drain(self, arrivals_us: np.ndarray,
+              requests: np.ndarray | None = None) -> DrainResult:
+        """Serve every request once, FIFO, under the policy.
+
+        arrivals_us: nondecreasing arrival times (one per request).
+        requests: binary ``[N, T, n_inputs]`` spike trains, required
+        when the batcher owns a runner.
+        """
+        arrivals = np.asarray(arrivals_us, np.float64)
+        if arrivals.ndim != 1:
+            raise ValueError(f"arrivals_us must be 1-D, got shape "
+                             f"{arrivals.shape}")
+        if len(arrivals) > 1 and np.any(np.diff(arrivals) < 0):
+            raise ValueError("arrivals_us must be nondecreasing (the queue "
+                             "is FIFO in arrival order)")
+        if self.runner is not None:
+            if requests is None:
+                raise ValueError("runner set but no requests given")
+            requests = np.asarray(requests)
+            if requests.ndim != 3 or len(requests) != len(arrivals):
+                raise ValueError(f"requests must be [N, T, n_inputs] with "
+                                 f"N == len(arrivals); got "
+                                 f"{requests.shape} vs {len(arrivals)}")
+        if (self.runner is not None and self.service_model is None
+                and len(arrivals)):
+            # measured mode: warm one engine compilation per bucket so
+            # jit time never counts as service time on the first hit
+            for b in self.policy.buckets:
+                self.runner(np.zeros((b,) + requests.shape[1:],
+                                     requests.dtype))
+        n_total = len(arrivals)
+        lat = np.zeros(n_total)
+        disp = np.zeros(n_total)
+        comp = np.zeros(n_total)
+        b_idx = np.zeros(n_total, np.int64)
+        batches: list[BatchRecord] = []
+        out_s: list = []
+        out_v: list = []
+        out_p: list = []
+
+        clock = 0.0
+        i = 0
+        while i < n_total:
+            n, dispatch = self._admit(arrivals, i, clock)
+            bucket = self.policy.bucket_of(n)
+            measured_us = 0.0
+            if self.runner is not None:
+                batch = requests[i:i + n]
+                if n < bucket:                   # pad to the bucket shape
+                    pad = np.zeros((bucket - n,) + batch.shape[1:],
+                                   batch.dtype)
+                    batch = np.concatenate([batch, pad])
+                t_wall = time.perf_counter()
+                spikes, v, stats = self.runner(batch)
+                measured_us = (time.perf_counter() - t_wall) * 1e6
+                out_s.append(spikes[:n])
+                out_v.append(v[:n])
+                out_p.append(np.asarray(stats["packet_counts"])[:n])
+            service_us = (self.service_model(bucket)
+                          if self.service_model is not None else measured_us)
+            completion = dispatch + service_us
+            lat[i:i + n] = completion - arrivals[i:i + n]
+            disp[i:i + n] = dispatch
+            comp[i:i + n] = completion
+            b_idx[i:i + n] = len(batches)
+            batches.append(BatchRecord(i, n, bucket, dispatch, service_us,
+                                       completion))
+            clock = completion                   # engine serially busy
+            i += n
+
+        outputs = None
+        if self.runner is not None and out_s:
+            outputs = (np.concatenate(out_s), np.concatenate(out_v),
+                       np.concatenate(out_p))
+        return DrainResult(lat, disp, comp, b_idx, batches, outputs)

@@ -1,0 +1,75 @@
+"""Artifact registry: N loaded ``Program``\\ s keyed by name.
+
+A serving process loads each model artifact once (``Program.load`` —
+never re-partitioning) and registers it under a unique name. Engine
+ownership stays **per model**: compiled engines and sharded runners
+live on each ``Program`` (lazily built, keyed on resolved build
+options), so two registered models never share or evict each other's
+compilations, and re-resolving a runner for the same model returns the
+same object.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.core.program import Program
+
+
+class ProgramRegistry:
+    """Name -> loaded :class:`~repro.core.program.Program`."""
+
+    def __init__(self):
+        self._programs: dict[str, Program] = {}
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, program: Program) -> Program:
+        """Register a loaded program; duplicate names are rejected."""
+        if not name:
+            raise ValueError("model name must be non-empty")
+        if name in self._programs:
+            raise ValueError(f"model {name!r} already registered; "
+                             "unregister it first to replace")
+        self._programs[name] = program
+        return program
+
+    def load(self, name: str, path: str | Path) -> Program:
+        """``Program.load`` an artifact and register it under ``name``."""
+        return self.register(name, Program.load(path))
+
+    def unregister(self, name: str) -> Program:
+        if name not in self._programs:
+            raise KeyError(f"model {name!r} not registered")
+        return self._programs.pop(name)
+
+    # -- lookup -------------------------------------------------------------
+
+    def get(self, name: str) -> Program:
+        try:
+            return self._programs[name]
+        except KeyError:
+            raise KeyError(f"model {name!r} not registered; have "
+                           f"{self.names()}") from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._programs))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._programs
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    # -- per-model runners --------------------------------------------------
+
+    def runner(self, name: str, *, sharded: bool = False, mesh=None):
+        """The model's batch-callable: ``[b, T, n_in] -> (s, v, stats)``.
+
+        Resolves to the program's owned engine (or owned sharded
+        runner) — repeated calls reuse the same compiled object, and
+        distinct models own distinct engines.
+        """
+        program = self.get(name)
+        if sharded:
+            return program.sharded_runner(mesh).run
+        return program.run

@@ -1,0 +1,86 @@
+"""Server loop: drive request streams against a ``ProgramRegistry``.
+
+No HTTP — a :class:`Request` stream is a list of (model, spike train,
+arrival time, stream id) records, which is what a transport layer
+would produce anyway. The server groups the stream per model
+(each model owns one engine and one micro-batch queue), drains every
+queue under its :class:`~repro.serve.batcher.BatchPolicy`, and
+surfaces p50/p99/throughput metrics as a plain dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serve.batcher import (BatchPolicy, DrainResult, MicroBatcher,
+                                 latency_metrics)
+from repro.serve.registry import ProgramRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request: a spike train for a named model."""
+    model: str
+    ext: np.ndarray                  # binary [T, n_inputs]
+    arrival_us: float
+    stream: int = 0                  # client-stream tag (FIFO per stream)
+
+
+class Server:
+    """Drains request streams against the registry, one queue per model.
+
+    policy: default :class:`BatchPolicy`; ``policies`` overrides it per
+    model name. ``service_model`` (bucket -> us) makes latencies
+    deterministic; ``None`` measures real engine calls. ``sharded``
+    routes every model through its owned multi-device runner.
+    """
+
+    def __init__(self, registry: ProgramRegistry, *,
+                 policy: BatchPolicy | None = None,
+                 policies: dict[str, BatchPolicy] | None = None,
+                 service_model=None, sharded: bool = False, mesh=None):
+        self.registry = registry
+        self.policy = policy or BatchPolicy()
+        self.policies = dict(policies or {})
+        self.service_model = service_model
+        self.sharded = sharded
+        self.mesh = mesh
+        self.last_results: dict[str, DrainResult] = {}
+
+    def serve(self, stream: list[Request]) -> dict:
+        """Serve every request; return the metrics dict.
+
+        The stream may interleave models and client streams; within
+        each model requests are served FIFO by arrival time (ties keep
+        stream order — the sort is stable).
+        """
+        by_model: dict[str, list[Request]] = {}
+        for r in sorted(stream, key=lambda r: r.arrival_us):
+            if r.model not in self.registry:
+                raise KeyError(f"request for unregistered model "
+                               f"{r.model!r}; have {self.registry.names()}")
+            by_model.setdefault(r.model, []).append(r)
+
+        self.last_results = {}
+        metrics: dict = {"models": {}}
+        for name, reqs in by_model.items():
+            runner = self.registry.runner(name, sharded=self.sharded,
+                                          mesh=self.mesh)
+            batcher = MicroBatcher(self.policies.get(name, self.policy),
+                                   runner=runner,
+                                   service_model=self.service_model)
+            ext = np.stack([r.ext for r in reqs])
+            arrivals = np.asarray([r.arrival_us for r in reqs])
+            res = batcher.drain(arrivals, ext)
+            self.last_results[name] = res
+            metrics["models"][name] = res.metrics()
+
+        results = list(self.last_results.values())
+        lat = (np.concatenate([r.latencies_us for r in results])
+               if results else np.zeros(0))
+        comp = (np.concatenate([r.completion_us for r in results])
+                if results else np.zeros(0))
+        metrics["total"] = latency_metrics(lat, comp)
+        metrics["total"]["models"] = len(results)
+        return metrics

@@ -1,0 +1,103 @@
+"""Multi-device data-parallel execution of a compiled ``Program``.
+
+The compiled batched executor (:class:`repro.core.engine_jax
+.JaxMappedEngine`) is embarrassingly parallel over the batch axis —
+every sample runs the same lowered program on its own spike train, all
+in exact int32 arithmetic. :class:`ShardedRunner` exploits that: it
+takes the engine's uncompiled step function and wraps it in
+``shard_map`` over a jax mesh, sharding the leading batch axis across
+the mesh's ``data`` axis (``PartitionSpec('data')`` in and out) and
+replicating the lowered program's constant arrays.
+
+Why the result is bit-exact vs the single-device engine:
+
+* each device executes the byte-identical scan on its batch shard —
+  there is no cross-sample communication, reduction, or reordering;
+* all arithmetic is int32 (deterministic-commit property, paper §4.2),
+  so shard boundaries cannot perturb any value;
+* ragged batches are handled by **pad-and-mask**: the batch is padded
+  with all-zero samples up to the next multiple of the shard count,
+  and the pad rows are sliced away (masked) from spikes, potentials,
+  and packet counts before stats are computed — zero-input pad samples
+  never touch the real rows.
+
+On CPU, CI forces >= 8 virtual devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see the
+``serving`` lane); with a single device the mesh degenerates to one
+shard and the runner is still exact, so the same tests run everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine_jax import finalize_outputs, normalize_ext_spikes
+
+
+class ShardedRunner:
+    """A ``Program`` compiled for data-parallel execution over a mesh.
+
+    Construction wraps the program's owned engine step function in
+    ``shard_map`` + ``jit``; :meth:`run` then serves any batch —
+    including ragged ones that do not divide the shard count — with
+    outputs bit-exact vs ``program.run(ext)`` on one device.
+    """
+
+    def __init__(self, program, mesh=None, *, nu_kernel: bool = True,
+                 interpret: bool | None = None):
+        if mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh()
+        if "data" not in mesh.axis_names:
+            raise ValueError(f"mesh axes {mesh.axis_names} lack 'data'; "
+                             "the batch axis shards over 'data' "
+                             "(launch.mesh.make_serving_mesh)")
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["data"])
+        engine = program.engine(nu_kernel=nu_kernel, interpret=interpret)
+        self._n_inputs = engine.lowered.n_inputs
+        self._n_internal = engine.lowered.n_internal
+        spec = P("data")
+        # check_rep=False: the Pallas NU kernel has no replication rule;
+        # every output is batch-sharded anyway, nothing is replicated.
+        self._run = jax.jit(shard_map(
+            engine.step_fn, mesh=mesh,
+            in_specs=(spec, spec, spec), out_specs=(spec, spec, spec),
+            check_rep=False))
+
+    def padded_size(self, b: int) -> int:
+        """Next multiple of the shard count (the pad-and-mask bucket)."""
+        d = self.n_shards
+        return ((b + d - 1) // d) * d
+
+    def run(self, ext_spikes: np.ndarray
+            ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Execute the program on ``ext_spikes`` across the mesh.
+
+        ext_spikes: binary ``[T, n_inputs]`` or ``[B, T, n_inputs]``;
+        returns ``(spikes, v_final, stats)`` shaped exactly like the
+        single-device engine (pad rows are sliced away before stats).
+        """
+        ext, squeeze = normalize_ext_spikes(ext_spikes, self._n_inputs)
+        b, t = ext.shape[0], ext.shape[1]
+        full = self.padded_size(b)
+        if full != b:                      # pad: all-zero samples
+            pad = np.zeros((full - b, t, self._n_inputs), ext.dtype)
+            ext = np.concatenate([ext, pad])
+        zeros = jnp.zeros((full, self._n_internal), jnp.int32)
+        spikes, v, pkts = self._run(jnp.asarray(ext, jnp.int32),
+                                    zeros, zeros)
+        # mask: drop the pad rows before any stats are derived
+        return finalize_outputs(np.asarray(spikes)[:b], np.asarray(v)[:b],
+                                np.asarray(pkts)[:b], squeeze)
+
+
+def sharded_runner(program, mesh=None, *, nu_kernel: bool = True,
+                   interpret: bool | None = None) -> ShardedRunner:
+    """Build a :class:`ShardedRunner` for ``program`` (default mesh:
+    every device on the ``data`` axis)."""
+    return ShardedRunner(program, mesh, nu_kernel=nu_kernel,
+                         interpret=interpret)

@@ -1,0 +1,527 @@
+"""Conformance/property tests for the serving subsystem (repro.serve).
+
+Covers: (a) micro-batcher queue semantics — FIFO order per stream,
+every request served exactly once, buckets always from the policy's
+pow2 set, deterministic simulated-clock accounting (exact expected
+latencies plus hypothesis properties); (b) sharded-vs-single-device
+bit-exactness over feedforward + recurrent graphs and ragged batch
+sizes (1, D-1, D, 3D+1) — spikes, potentials AND packet counts
+byte-identical; (c) registry semantics (duplicate-name rejection, lazy
+per-model engine ownership); (d) the golden-artifact format pin; and
+(e) the seeded serving example reporting identical p50/p99 twice.
+
+Runs on single-device CPU and on the 8-virtual-device CI ``serving``
+lane (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the
+device count is read from jax, never assumed.
+"""
+import importlib.util
+import json
+import sys
+import zipfile
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_ext, make_feedforward, make_hw
+from repro.core import Program, compile, random_graph
+from repro.launch.mesh import make_serving_mesh
+from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
+                         Request, Server, ShardedRunner,
+                         linear_service_model)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # CI installs hypothesis; bare envs skip
+    HAVE_HYPOTHESIS = False
+
+GOLDEN = Path(__file__).parent / "golden"
+
+
+def _recurrent(seed=3):
+    g = random_graph(12, 20, 160, seed=seed)
+    assert (g.pre >= g.n_inputs).any(), "graph must contain recurrence"
+    return g
+
+
+@pytest.fixture(scope="module")
+def ff_program():
+    g = make_feedforward()
+    return compile(g, make_hw(g), max_iters=4000)
+
+
+@pytest.fixture(scope="module")
+def rec_program():
+    g = _recurrent()
+    return compile(g, make_hw(g), max_iters=4000)
+
+
+def ragged_sizes() -> list[int]:
+    """1, D-1, D, 3D+1 for the actual device count D (deduplicated)."""
+    d = len(jax.devices())
+    return sorted({1, max(1, d - 1), d, 3 * d + 1})
+
+
+# ---------------------------------------------------------------------------
+# BatchPolicy
+# ---------------------------------------------------------------------------
+
+def test_policy_default_buckets_are_pow2_capped():
+    assert BatchPolicy(max_batch=8).buckets == (1, 2, 4, 8)
+    # a non-power-of-two max is its own (largest) bucket
+    assert BatchPolicy(max_batch=6).buckets == (1, 2, 4, 6)
+    assert BatchPolicy(max_batch=1).buckets == (1,)
+
+
+def test_policy_bucket_of_rounds_up():
+    pol = BatchPolicy(max_batch=8)
+    assert [pol.bucket_of(n) for n in range(1, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+    with pytest.raises(ValueError):
+        pol.bucket_of(9)
+    with pytest.raises(ValueError):
+        pol.bucket_of(0)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=4, max_wait_us=-1.0)
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=4, buckets=(2, 1, 4))       # not ascending
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=8, buckets=(1, 2, 4))       # can't hold 8
+    assert BatchPolicy(max_batch=3, buckets=(1, 3)).bucket_of(2) == 3
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher: deterministic simulated-clock semantics (no engine)
+# ---------------------------------------------------------------------------
+
+ARR = np.array([0.0, 10.0, 20.0, 1000.0, 1001.0])
+LINEAR = linear_service_model(100.0, 10.0)      # service(b) = 100 + 10 b
+
+
+def test_batcher_drain_immediate_semantics():
+    """max_wait=0: serve what has arrived; engine serially busy."""
+    res = MicroBatcher(BatchPolicy(max_batch=2),
+                       service_model=LINEAR).drain(ARR)
+    # batch 1: only request 0 has arrived at t=0 -> bucket 1, done 110;
+    # batch 2: requests 1+2 (both arrived by 110) -> bucket 2, done 230;
+    # requests 3, 4 each alone (arrivals 1000, 1001 vs busy-until times)
+    np.testing.assert_allclose(res.latencies_us,
+                               [110.0, 220.0, 210.0, 110.0, 219.0])
+    assert [(b.first, b.size, b.bucket) for b in res.batches] == \
+        [(0, 1, 1), (1, 2, 2), (3, 1, 1), (4, 1, 1)]
+
+
+def test_batcher_max_wait_holds_partial_batches():
+    """A partial batch dispatches when the oldest waited max_wait_us."""
+    res = MicroBatcher(BatchPolicy(max_batch=4, max_wait_us=50.0),
+                       service_model=LINEAR).drain(ARR)
+    # requests 0-2 arrive within the 50us window -> dispatch at 50,
+    # bucket 4, done 190; requests 3-4 dispatch at 1000+50
+    np.testing.assert_allclose(res.latencies_us,
+                               [190.0, 180.0, 170.0, 170.0, 169.0])
+    assert [(b.first, b.size, b.dispatch_us) for b in res.batches] == \
+        [(0, 3, 50.0), (3, 2, 1050.0)]
+
+
+def test_batcher_full_batch_dispatches_before_deadline():
+    arr = np.array([0.0, 1.0, 2.0, 3.0])
+    res = MicroBatcher(BatchPolicy(max_batch=4, max_wait_us=1000.0),
+                       service_model=LINEAR).drain(arr)
+    assert len(res.batches) == 1
+    assert res.batches[0].dispatch_us == 3.0     # full at 4th arrival
+    np.testing.assert_allclose(res.completion_us, 3.0 + 140.0)
+
+
+def test_batcher_accounting_identity():
+    res = MicroBatcher(BatchPolicy(max_batch=3, max_wait_us=25.0),
+                       service_model=LINEAR).drain(ARR)
+    np.testing.assert_allclose(res.completion_us - ARR, res.latencies_us)
+    assert np.all(res.dispatch_us >= ARR)            # causal dispatch
+    assert np.all(np.diff(res.completion_us) >= 0)   # FIFO completions
+    sizes = [b.size for b in res.batches]
+    assert sum(sizes) == len(ARR)                    # served exactly once
+    assert res.metrics()["requests"] == len(ARR)
+
+
+def test_batcher_input_validation():
+    with pytest.raises(ValueError):                  # nothing to simulate
+        MicroBatcher(BatchPolicy())
+    b = MicroBatcher(BatchPolicy(), service_model=LINEAR)
+    with pytest.raises(ValueError):                  # arrivals went back
+        b.drain(np.array([0.0, 5.0, 4.0]))
+    with pytest.raises(ValueError):                  # 2-D arrivals
+        b.drain(np.zeros((2, 2)))
+    with pytest.raises(ValueError):                  # runner, no requests
+        MicroBatcher(BatchPolicy(), runner=lambda x: x,
+                     service_model=LINEAR).drain(np.array([0.0]))
+
+
+def test_batcher_empty_queue():
+    res = MicroBatcher(BatchPolicy(), service_model=LINEAR).drain(
+        np.array([], np.float64))
+    assert res.n_requests == 0 and res.batches == []
+    m = res.metrics()
+    assert m["requests"] == 0 and m["batches"] == 0
+    # the key set is schema-stable even with nothing served
+    assert {"p50_ms", "p99_ms", "mean_ms", "throughput_rps",
+            "buckets"} <= set(m)
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher: hypothesis properties
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    policies = st.builds(
+        BatchPolicy,
+        max_batch=st.integers(min_value=1, max_value=16),
+        max_wait_us=st.sampled_from([0.0, 30.0, 500.0]))
+    arrival_gaps = st.lists(
+        st.floats(min_value=0.0, max_value=800.0,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=64)
+
+    @given(policies, arrival_gaps)
+    @settings(max_examples=80, deadline=None)
+    def test_property_served_exactly_once(policy, gaps):
+        arr = np.cumsum(np.asarray(gaps))
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        # batches tile [0, N) contiguously: everything served once
+        firsts = [b.first for b in res.batches]
+        sizes = [b.size for b in res.batches]
+        assert firsts[0] == 0 and sum(sizes) == len(arr)
+        assert all(f + s == nf for f, s, nf
+                   in zip(firsts, sizes, firsts[1:] + [len(arr)]))
+        assert np.all(res.latencies_us > 0)
+
+    @given(policies, arrival_gaps)
+    @settings(max_examples=80, deadline=None)
+    def test_property_buckets_always_in_policy_set(policy, gaps):
+        arr = np.cumsum(np.asarray(gaps))
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        for b in res.batches:
+            assert b.bucket in policy.buckets
+            assert 1 <= b.size <= policy.max_batch <= max(policy.buckets)
+            assert b.bucket >= b.size
+
+    @given(policies, arrival_gaps,
+           st.integers(min_value=1, max_value=5))
+    @settings(max_examples=80, deadline=None)
+    def test_property_fifo_preserved_per_stream(policy, gaps, n_streams):
+        arr = np.cumsum(np.asarray(gaps))
+        streams = np.arange(len(arr)) % n_streams   # interleaved clients
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        for s in range(n_streams):
+            comp = res.completion_us[streams == s]
+            assert np.all(np.diff(comp) >= 0)       # arrival order kept
+
+    @given(policies, arrival_gaps)
+    @settings(max_examples=80, deadline=None)
+    def test_property_simulated_clock_monotone(policy, gaps):
+        arr = np.cumsum(np.asarray(gaps))
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        # completions monotone in arrival order; dispatch causal and
+        # serialized (engine busy until the previous batch finished)
+        assert np.all(np.diff(res.completion_us) >= 0)
+        assert np.all(res.dispatch_us >= arr)
+        for prev, nxt in zip(res.batches, res.batches[1:]):
+            assert nxt.dispatch_us >= prev.completion_us
+else:                                   # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_batcher_suite():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher over the real engine: outputs bit-exact per request
+# ---------------------------------------------------------------------------
+
+def test_batcher_outputs_match_unbatched_runs(ff_program):
+    g = ff_program.graph
+    n = 10
+    reqs = make_ext(g, n, 8, seed=2)
+    arr = np.cumsum(np.full(n, 40.0))
+    batcher = MicroBatcher(BatchPolicy(max_batch=4, max_wait_us=100.0),
+                           runner=ff_program.run, service_model=LINEAR)
+    res = batcher.drain(arr, reqs)
+    assert res.outputs is not None
+    spikes, v, pkts = res.outputs
+    assert spikes.shape[0] == v.shape[0] == pkts.shape[0] == n
+    for i in range(n):                   # padding never leaks into rows
+        s1, v1, st1 = ff_program.run(reqs[i])
+        assert spikes[i].tobytes() == s1.tobytes()
+        assert v[i].tobytes() == v1.tobytes()
+        np.testing.assert_array_equal(pkts[i], st1["packet_counts"])
+
+
+def test_batcher_measured_mode_warms_buckets(ff_program):
+    """service_model=None: real wall-clock service times, with one
+    warm-up call per bucket so jit compile never lands in a latency."""
+    g = ff_program.graph
+    calls = []
+
+    def runner(batch):
+        calls.append(len(batch))
+        return ff_program.run(batch)
+
+    n = 5
+    reqs = make_ext(g, n, 6, seed=9)
+    arr = np.zeros(n)                    # all arrive at once
+    res = MicroBatcher(BatchPolicy(max_batch=4),
+                       runner=runner).drain(arr, reqs)
+    # warm-up hit every bucket (1, 2, 4) before any timed batch
+    assert calls[:3] == [1, 2, 4]
+    assert np.all(res.latencies_us > 0)
+    np.testing.assert_allclose(res.completion_us - arr, res.latencies_us)
+    assert [b.service_us > 0 for b in res.batches] == [True, True]
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: bit-exact vs the single-device engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["feedforward", "recurrent"])
+def test_sharded_bit_exact_ragged_batches(kind, ff_program, rec_program):
+    program = ff_program if kind == "feedforward" else rec_program
+    g = program.graph
+    for b in ragged_sizes():
+        ext = make_ext(g, b, 12, seed=b)
+        s1, v1, st1 = program.run(ext)                 # single-device jax
+        s2, v2, st2 = program.run(ext, sharded=True)   # shard_map mesh
+        assert s2.tobytes() == s1.tobytes(), f"spikes differ at B={b}"
+        assert v2.tobytes() == v1.tobytes(), f"v_final differs at B={b}"
+        assert st2["packet_counts"].tobytes() == \
+            st1["packet_counts"].tobytes(), f"packets differ at B={b}"
+        assert st2["mean_packets_per_step"] == st1["mean_packets_per_step"]
+
+
+def test_sharded_unbatched_input_squeezes(rec_program):
+    g = rec_program.graph
+    ext = make_ext(g, 1, 9, seed=1)[0]                 # [T, n_in]
+    s1, v1, st1 = rec_program.run(ext)
+    s2, v2, st2 = rec_program.run(ext, sharded=True)
+    assert s2.shape == s1.shape and v2.shape == v1.shape
+    assert s2.tobytes() == s1.tobytes()
+    np.testing.assert_array_equal(st2["packet_counts"],
+                                  st1["packet_counts"])
+
+
+def test_sharded_runner_owned_and_cached(rec_program):
+    r1 = rec_program.sharded_runner()
+    assert rec_program.sharded_runner() is r1          # cached like engines
+    mesh = make_serving_mesh()
+    assert rec_program.sharded_runner(mesh) is \
+        rec_program.sharded_runner(mesh)
+    assert r1.n_shards == int(mesh.shape["data"])
+    assert r1.padded_size(1) == r1.n_shards            # pad-and-mask rule
+    assert r1.padded_size(3 * r1.n_shards + 1) == 4 * r1.n_shards
+
+
+def test_sharded_rejects_bad_requests(rec_program):
+    with pytest.raises(ValueError, match="sharded=True runs the jax"):
+        rec_program.run(make_ext(rec_program.graph, 1, 4), sharded=True,
+                        engine="python")
+    with pytest.raises(ValueError, match="lack 'data'"):
+        ShardedRunner(rec_program, jax.make_mesh((1,), ("model",)))
+    with pytest.raises(ValueError, match="ext_spikes shape"):
+        rec_program.sharded_runner().run(np.zeros((4, 5), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_duplicate_names(ff_program, rec_program):
+    reg = ProgramRegistry()
+    reg.register("m", ff_program)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("m", rec_program)
+    with pytest.raises(ValueError):
+        reg.register("", ff_program)
+    assert reg.names() == ("m",) and "m" in reg and len(reg) == 1
+
+
+def test_registry_lookup_and_unregister(ff_program):
+    reg = ProgramRegistry()
+    with pytest.raises(KeyError, match="not registered"):
+        reg.get("missing")
+    reg.register("m", ff_program)
+    assert reg.get("m") is ff_program
+    assert reg.unregister("m") is ff_program
+    with pytest.raises(KeyError):
+        reg.unregister("m")
+    reg.register("m", ff_program)                      # re-register ok
+
+
+def test_registry_engine_ownership_per_model(ff_program, rec_program):
+    reg = ProgramRegistry()
+    reg.register("a", ff_program)
+    reg.register("b", rec_program)
+    # engines are lazy, owned by each Program, reused across lookups
+    assert reg.get("a").engine() is reg.get("a").engine()
+    assert reg.get("a").engine() is not reg.get("b").engine()
+    assert reg.runner("a", sharded=True).__self__ is \
+        reg.runner("a", sharded=True).__self__         # one ShardedRunner
+    ext = make_ext(ff_program.graph, 2, 6, seed=0)
+    s1, _, _ = reg.runner("a")(ext)
+    s2, _, _ = ff_program.run(ext)
+    np.testing.assert_array_equal(s1, s2)
+
+
+def test_registry_load_from_artifact(ff_program, tmp_path):
+    path = ff_program.save(tmp_path / "m.npz")
+    reg = ProgramRegistry()
+    p = reg.load("m", path)
+    assert p.ot_depth == ff_program.ot_depth
+    ext = make_ext(ff_program.graph, 2, 6, seed=3)
+    np.testing.assert_array_equal(p.run(ext)[0], ff_program.run(ext)[0])
+
+
+# ---------------------------------------------------------------------------
+# Server loop
+# ---------------------------------------------------------------------------
+
+def _stream(ff_program, rec_program, seed=4, n=12):
+    rng = np.random.default_rng(seed)
+    stream, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(150.0))
+        name = "ff" if i % 3 else "rec"
+        g = (ff_program if name == "ff" else rec_program).graph
+        ext = (rng.random((8, g.n_inputs)) < 0.3).astype(np.int32)
+        stream.append(Request(name, ext, t, stream=i % 2))
+    return stream
+
+
+def test_server_metrics_dict(ff_program, rec_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    reg.register("rec", rec_program)
+    srv = Server(reg, policy=BatchPolicy(max_batch=4, max_wait_us=60.0),
+                 service_model=LINEAR)
+    metrics = srv.serve(_stream(ff_program, rec_program))
+    assert set(metrics) == {"models", "total"}
+    assert set(metrics["models"]) == {"ff", "rec"}
+    for m in metrics["models"].values():
+        assert {"p50_ms", "p99_ms", "throughput_rps",
+                "buckets"} <= set(m)
+        assert all(b in (1, 2, 4) for b in m["buckets"])
+    assert metrics["total"]["requests"] == 12
+    assert metrics["total"]["models"] == 2
+    # deterministic: same stream, same metrics (simulated clock)
+    assert srv.serve(_stream(ff_program, rec_program)) == metrics
+
+
+def test_server_rejects_unknown_model(ff_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    srv = Server(reg, service_model=LINEAR)
+    bad = [Request("nope", np.zeros((4, 16), np.int32), 0.0)]
+    with pytest.raises(KeyError, match="nope"):
+        srv.serve(bad)
+
+
+def test_server_per_model_policy_override(ff_program, rec_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    reg.register("rec", rec_program)
+    srv = Server(reg, policy=BatchPolicy(max_batch=4, max_wait_us=1e6),
+                 policies={"rec": BatchPolicy(max_batch=1)},
+                 service_model=LINEAR)
+    metrics = srv.serve(_stream(ff_program, rec_program))
+    assert set(metrics["models"]["rec"]["buckets"]) == {1}   # no batching
+    assert max(metrics["models"]["ff"]["buckets"]) > 1       # held + batched
+
+
+# ---------------------------------------------------------------------------
+# Golden artifact: the save/load format pin
+# ---------------------------------------------------------------------------
+
+def test_golden_artifact_loads_and_runs_bit_exact():
+    program = Program.load(GOLDEN / "tiny_program_v1.npz")
+    assert program.feasible
+    with np.load(GOLDEN / "tiny_program_v1_io.npz") as io:
+        for engine in ("python", "jax", "oracle"):
+            s, v, stats = program.run(io["ext"], engine=engine)
+            np.testing.assert_array_equal(s, io["spikes"], err_msg=engine)
+            np.testing.assert_array_equal(v, io["v_final"], err_msg=engine)
+            np.testing.assert_array_equal(stats["packet_counts"],
+                                          io["packet_counts"],
+                                          err_msg=engine)
+
+
+def test_golden_artifact_roundtrips_byte_exact(tmp_path):
+    program = Program.load(GOLDEN / "tiny_program_v1.npz")
+    resaved = program.save(tmp_path / "resaved.npz")
+    with np.load(GOLDEN / "tiny_program_v1.npz") as a, \
+            np.load(resaved) as b:
+        assert set(a.files) == set(b.files)
+        assert json.loads(str(a["header"][()])) == \
+            json.loads(str(b["header"][()]))
+        for k in a.files:
+            if k != "header":
+                assert a[k].tobytes() == b[k].tobytes(), k
+                assert a[k].dtype == b[k].dtype, k
+
+
+def _rewrite_header(src: Path, dst: Path, mutate) -> Path:
+    """Copy an artifact npz with a mutated JSON header."""
+    with np.load(src) as z:
+        arrays = {k: z[k] for k in z.files}
+    header = json.loads(str(arrays["header"][()]))
+    mutate(header)
+    arrays["header"] = np.asarray(json.dumps(header))
+    np.savez_compressed(dst, **arrays)
+    return dst
+
+
+def test_golden_artifact_wrong_version_rejected(tmp_path):
+    bad = _rewrite_header(
+        GOLDEN / "tiny_program_v1.npz", tmp_path / "bad_version.npz",
+        lambda h: h.update(version=h["version"] + 1))
+    with pytest.raises(ValueError, match="version"):
+        Program.load(bad)
+    worse = _rewrite_header(
+        GOLDEN / "tiny_program_v1.npz", tmp_path / "bad_format.npz",
+        lambda h: h.update(format="not-a-program"))
+    with pytest.raises(ValueError, match="format"):
+        Program.load(worse)
+    # not-an-artifact npz
+    np.savez_compressed(tmp_path / "junk.npz", x=np.arange(3))
+    with pytest.raises(ValueError, match="artifact"):
+        Program.load(tmp_path / "junk.npz")
+    with zipfile.ZipFile(GOLDEN / "tiny_program_v1.npz") as z:
+        assert "header.npy" in z.namelist()            # format layout pin
+
+
+# ---------------------------------------------------------------------------
+# Example seeding: two runs, identical p50/p99
+# ---------------------------------------------------------------------------
+
+def _load_example():
+    path = Path(__file__).parent.parent / "examples" / "serve_snn.py"
+    spec = importlib.util.spec_from_file_location("serve_snn_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_example_seed_determinism(tmp_path):
+    mod = _load_example()
+    argv = ["--artifact", str(tmp_path / "demo.npz"),
+            "--requests", "24", "--timesteps", "8", "--seed", "7"]
+    m1 = mod.main(argv)
+    m2 = mod.main(argv)                 # artifact reloaded, not recompiled
+    assert m1["p50_ms"] == m2["p50_ms"]
+    assert m1["p99_ms"] == m2["p99_ms"]
+    assert m1["buckets"] == m2["buckets"]
+    m3 = mod.main(argv[:-1] + ["8"])    # different seed, different stream
+    assert (m3["p50_ms"], m3["p99_ms"]) != (m1["p50_ms"], m1["p99_ms"])

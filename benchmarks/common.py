@@ -82,6 +82,6 @@ def simulate_inference(cfg, params, hw, qc: QuantConfig, sample,
                                         cfg.timesteps, key))[:, 0]
     else:
         spikes = sample.astype(np.int32)
-    _, _, stats = program.run(spikes.astype(np.int32), engine="python")
+    _, _, stats = program.run(spikes.astype(np.int32), "python")
     prof = program.profile(stats, n_synapses=q.n_total_synapses)
     return q, program, prof.cycle

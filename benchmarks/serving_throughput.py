@@ -11,10 +11,17 @@ Rows (land in BENCH_smoke.json via ``benchmarks.run --smoke``):
   time on the same batch (measured honestly: forced-host CPU devices
   share the physical cores, so expect ~1x in CI; the row tracks the
   trajectory, the acceptance bar is bit_exact)
+* ``serve.sharded.dispatch_us`` — per-call overhead of the shard_map
+  path at a tiny batch (the reason ``ShardedRunner`` routes
+  B < devices x min_shard through the single-device engine)
 * ``serve.batcher.p50_ms`` / ``serve.batcher.p99_ms`` — deterministic
   micro-batcher drain under the linear service model
 * ``serve.batcher.deterministic`` — 1.0 iff two same-seed drains report
   identical latencies
+* ``bench.first_request_ms`` / ``bench.steady_p50_ms`` — median
+  genuinely-first request over a few COLD engines after AOT bucket
+  precompile vs the p50 of subsequent identical requests; acceptance
+  is first <= 2x steady
 
 jax locks the host device count at first backend init, and the smoke
 runner imports other jax-using benchmarks first — so the measurement
@@ -80,7 +87,9 @@ def _measure(quick: bool) -> list[tuple]:
     import numpy as np
 
     from repro.core import HardwareConfig, compile, random_graph
+    from repro.core.execution import ExecutionSpec
     from repro.serve import BatchPolicy, MicroBatcher, linear_service_model
+    from repro.serve.sharded import ShardedRunner
 
     n_dev = len(jax.devices())
     rows: list[tuple] = [("serve.sharded.devices", n_dev,
@@ -101,7 +110,7 @@ def _measure(quick: bool) -> list[tuple]:
     ext = (rng.random((b_ragged, t_steps, g.n_inputs)) < 0.3) \
         .astype(np.int32)
     s1, v1, st1 = program.run(ext)                    # single-device engine
-    s2, v2, st2 = program.run(ext, sharded=True)
+    s2, v2, st2 = program.run(ext, ExecutionSpec(mesh="auto"))
     exact = (s1.tobytes() == s2.tobytes() and v1.tobytes() == v2.tobytes()
              and np.array_equal(st1["packet_counts"], st2["packet_counts"]))
     rows.append(("serve.sharded.bit_exact", float(exact),
@@ -120,6 +129,50 @@ def _measure(quick: bool) -> list[tuple]:
     rows.append(("serve.sharded.speedup", t_single / t_sharded,
                  f"B={b_perf}, single {t_single * 1e3:.1f}ms vs "
                  f"sharded {t_sharded * 1e3:.1f}ms"))
+
+    # -- dispatch overhead: why tiny batches fall back ----------------------
+    # min_shard=0 forces the true shard path even at B = n_dev; the
+    # delta vs the single-device engine on the same batch is the pure
+    # shard_map dispatch cost the B < devices x min_shard fallback saves
+    b_small = n_dev
+    ext_s = ext[:b_small]
+    shard_forced = ShardedRunner(program, min_shard=0)
+    t_sh = _timed(lambda: shard_forced.run(ext_s), repeats)
+    t_si = _timed(lambda: program.run(ext_s), repeats)
+    rows.append(("serve.sharded.dispatch_us", (t_sh - t_si) * 1e6,
+                 f"shard_map minus single-device at B={b_small}; "
+                 f"ShardedRunner routes smaller batches single-device"))
+
+    # -- cold start: AOT bucket precompile ----------------------------------
+    # each JaxMappedEngine below is a FRESH engine on the same artifact
+    # (built outside Program's cache), AOT-warmed via precompile — the
+    # timed call is that engine's genuinely-first request. A single
+    # first request is one sample, so take the median over a few
+    # independent cold engines to keep scheduler noise out of the row.
+    from repro.core import JaxMappedEngine
+    cold = ExecutionSpec(donate=True).resolve()
+    policy = BatchPolicy(max_batch=8)
+    req = ext[:policy.max_batch]
+    firsts, eng = [], None
+    for _ in range(3):
+        eng = JaxMappedEngine(program.graph, program.lowered, cold)
+        eng.precompile(policy.buckets, t_steps)
+        t0 = time.perf_counter()
+        eng.run(req)
+        firsts.append((time.perf_counter() - t0) * 1e3)
+    first_ms = float(np.median(firsts))
+    steady = []
+    for _ in range(10 if quick else 20):
+        t0 = time.perf_counter()
+        eng.run(req)
+        steady.append((time.perf_counter() - t0) * 1e3)
+    steady_p50 = float(np.percentile(steady, 50))
+    rows.append(("bench.first_request_ms", first_ms,
+                 f"median first request over 3 cold AOT-precompiled "
+                 f"engines, B={policy.max_batch} T={t_steps}"))
+    rows.append(("bench.steady_p50_ms", steady_p50,
+                 f"p50 of subsequent identical requests; acceptance: "
+                 f"first <= 2x steady"))
 
     # -- micro-batcher: deterministic drain ---------------------------------
     n_req = 64 if quick else 256

@@ -9,7 +9,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import HardwareConfig, Program, compile, random_graph
+from repro.core import (ExecutionSpec, HardwareConfig, Program, compile,
+                        random_graph)
 
 # 1. an irregular spiking network: 16 inputs, 32 internal neurons,
 #    300 nonzero synapses (paper Fig. 2b style)
@@ -27,12 +28,13 @@ rep = program.report
 print(f"feasible={program.feasible}  operation-table depth={program.ot_depth}"
       f"  SPU loads={rep.spu_synapse_counts.tolist()}")
 
-# 4. execute 20 timesteps on all three engines through the SAME surface;
-#    the mapped program must match the dense integer-LIF oracle
-#    BIT-EXACTLY (deterministic commit, paper §4.3)
+# 4. execute 20 timesteps on all three engines through the SAME surface
+#    — program.run(ext, spec) where spec is an ExecutionSpec or an
+#    engine-name shorthand; the mapped program must match the dense
+#    integer-LIF oracle BIT-EXACTLY (deterministic commit, paper §4.3)
 ext = (np.random.default_rng(0).random((20, 16)) < 0.3).astype(np.int32)
-s_oracle, _, _ = program.run(ext, engine="oracle")
-s_mapped, _, stats = program.run(ext, engine="python")
+s_oracle, _, _ = program.run(ext, "oracle")
+s_mapped, _, stats = program.run(ext, "python")
 assert np.array_equal(s_oracle, s_mapped), "determinism violated!"
 print(f"bit-exact over {s_oracle.size} neuron-timesteps "
       f"({int(s_oracle.sum())} spikes)")
@@ -44,20 +46,28 @@ print(f"latency={prof.latency_us:.1f} us  "
       f"  ({prof.energy_per_synapse_nj:.3f} nJ/synapse)"
       f"  BRAMs={prof.resources.brams}")
 
-# 6. the compiled batched engine (lax.scan + Pallas Neuron Unit) is the
-#    default: 8 spike trains through one XLA call, still bit-exact
+# 6. the compiled batched engine is the default: 8 spike trains through
+#    one XLA call per scan — the whole timestep (routing + per-SPU
+#    accumulation + Neuron Unit) runs as ONE fused Pallas megakernel
+#    (ExecutionSpec(kernel="fused"), the platform default); every tier
+#    is bit-exact, so the spec only moves the speed point
 ext_b = (np.random.default_rng(1).random((8, 20, 16)) < 0.3).astype(np.int32)
-s_b, _, stats_b = program.run(ext_b)          # engine="jax"
+s_b, _, stats_b = program.run(ext_b)          # ExecutionSpec() default
+s_lif, _, _ = program.run(ext_b, ExecutionSpec(kernel="lif"))
+assert np.array_equal(s_b, s_lif), "kernel tiers must be bit-exact"
 for i in range(8):
-    assert np.array_equal(s_b[i], program.run(ext_b[i], engine="oracle")[0])
-print(f"batched engine: {s_b.shape[0]} samples in one call, bit-exact; "
+    assert np.array_equal(s_b[i], program.run(ext_b[i], "oracle")[0])
+print(f"batched engine: {s_b.shape[0]} samples in one call, bit-exact "
+      f"across kernel tiers; "
       f"mean packets/step={stats_b['mean_packets_per_step']:.1f}")
 
 # 7. persist the artifact: save once, serve anywhere — load never
-#    re-runs the stochastic partitioner and round-trips bit-exactly
+#    re-runs the stochastic partitioner and round-trips bit-exactly;
+#    precompile= AOT-compiles the serving batch buckets at load time
+#    so the first request never pays XLA
 path = program.save(Path(tempfile.mkdtemp()) / "toy_program")
-loaded = Program.load(path)
-s_l, _, _ = loaded.run(ext_b)
+loaded = Program.load(path, precompile=[8], timesteps=20)
+s_l, _, _ = loaded.run(ext_b)                 # hits the AOT executable
 assert np.array_equal(s_l, s_b), "artifact round-trip must be bit-exact"
 print(f"saved+loaded {path.name}: outputs identical, "
       f"{len(loaded.init_packets())} init packets")

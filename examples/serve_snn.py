@@ -26,7 +26,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import HardwareConfig, Program, compile, random_graph
+from repro.core import (ExecutionSpec, HardwareConfig, Program, compile,
+                        random_graph)
 from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
                          linear_service_model)
 
@@ -64,7 +65,8 @@ def run_demo(args) -> dict:
 
     policy = BatchPolicy(max_batch=args.batch_max,
                          max_wait_us=args.max_wait_us)
-    runner = registry.runner("demo", sharded=args.sharded)
+    spec = ExecutionSpec(mesh="auto") if args.sharded else None
+    runner = registry.runner("demo", spec)
     batcher = MicroBatcher(
         policy, runner=runner,
         service_model=None if args.measured else linear_service_model())

@@ -43,7 +43,7 @@ def main():
           f"(paper: 742)")
 
     print("== mapped inference on one sample ==")
-    _, _, stats = program.run(xte[0].astype(np.int32), engine="python")
+    _, _, stats = program.run(xte[0].astype(np.int32), "python")
     prof = program.profile(stats, n_synapses=q.n_total_synapses)
     print(f"latency {prof.latency_us / 1e3:.3f} ms/sample (paper: 1.41 ms), "
           f"energy {prof.energy_mj:.3f} mJ (paper: 0.77)")

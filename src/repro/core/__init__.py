@@ -15,8 +15,13 @@
 #   cost          FPGA resource model (Table 2 fit)
 #   passes        explicit compile passes (partition/search/schedule/
 #                 validate/lower)
+#   execution     ExecutionSpec: ONE frozen value naming engine/kernel
+#                 tier/interpret/mesh/donation; the engine cache key
+#   aot           AOT bucket precompile + persistent XLA cache
 #   program       the Program artifact: compile -> run/profile/save/load
 #   compiler      deprecated pre-Program wrappers
+from repro.core.aot import enable_persistent_cache
+from repro.core.execution import (ExecutionSpec, KERNELS, default_kernel)
 from repro.core.graph import SNNGraph, from_quantized, random_graph
 from repro.core.memory_model import (HardwareConfig, spu_score, spu_usage,
                                      scores_from_assignment,
@@ -70,6 +75,8 @@ __all__ = [
     "partition_pass", "schedule_pass", "search_pass", "validate_pass",
     "ENGINES", "PROGRAM_FORMAT_VERSION", "Program", "ProfileReport",
     "compile",
+    # execution spec + AOT layer
+    "ExecutionSpec", "KERNELS", "default_kernel", "enable_persistent_cache",
     # deprecated wrappers
     "compile_snn", "compile_quantized",
 ]

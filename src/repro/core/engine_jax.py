@@ -5,10 +5,19 @@ over timesteps x OT slots x SPUs that mirrors the hardware datapath
 structure op by op. That fidelity costs ~0.5 s per MNIST image — fine for
 verification, useless for serving. This module lowers a scheduled program
 ONCE into dense arrays (:func:`repro.core.schedule.lower_tables`) and
-executes it with ``jax.lax.scan`` over timesteps, a vectorized
-segment-sum over all (SPU, slot) ops, and the fused Pallas Neuron-Unit
-kernel (:func:`repro.kernels.lif_update.lif_update_int`), with a leading
-batch dimension pushing many samples through one mapped program.
+executes it with ``jax.lax.scan`` over timesteps, with a leading batch
+dimension pushing many samples through one mapped program. The body of
+the scan is one of three **kernel tiers**, selected by
+:class:`~repro.core.execution.ExecutionSpec`:
+
+* ``"fused"`` (platform default) — the whole timestep in ONE Pallas
+  launch: multicast routing + per-SPU accumulation as a packed dense
+  int contraction, Neuron-Unit update as the in-register epilogue,
+  packet counts for free (:mod:`repro.kernels.fused_step`);
+* ``"lif"`` — the split pipeline: vectorized segment-sum over all
+  (SPU, slot) ops + the small Pallas Neuron-Unit kernel
+  (:func:`repro.kernels.lif_update.lif_update_int`);
+* ``"reference"`` — segment-sum + pure-jnp ``lif_step_int``.
 
 Why this is still the SAME program, bit for bit (deterministic-commit
 property, paper §4.2):
@@ -30,10 +39,13 @@ the emitted per-timestep MC packet counts equal ``run_mapped``'s stats,
 so ``CycleModel`` latency/energy reports are unchanged.
 
 Engines are owned by the :class:`repro.core.program.Program` artifact
-(``program.run(ext, engine="jax")`` / ``program.engine()``), which
-builds them lazily from its already-lowered program and reuses them
-across calls; construct :class:`JaxMappedEngine` directly only when
-driving a bare ``OpTables`` outside the artifact API.
+(``program.run(ext)`` / ``program.engine(spec)``), which builds them
+lazily from its already-lowered program, keyed on the **resolved**
+spec, and reuses them across calls; construct :class:`JaxMappedEngine`
+directly only when driving a bare ``OpTables`` outside the artifact
+API. :meth:`JaxMappedEngine.precompile` AOT-compiles the scan for the
+serving buckets so the first real request never traces (see
+:mod:`repro.core.aot`).
 """
 from __future__ import annotations
 
@@ -45,10 +57,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import packet_stats
+from repro.core.execution import (_NU_KERNEL_TIER, ExecutionSpec, as_spec,
+                                  spec_from_legacy_kwargs)
 from repro.core.graph import SNNGraph
 from repro.core.scheduling import LoweredProgram, OpTables, lower_tables
+from repro.kernels.fused_step import fused_step, pack_dense
 from repro.kernels.lif_update import lif_update_int
-from repro.kernels.ops import _default_interpret
 from repro.snn.lif import LIFIntParams, lif_step_int
 
 
@@ -91,20 +105,37 @@ class JaxMappedEngine:
     per (batch, timesteps) shape.
     """
 
-    def __init__(self, g: SNNGraph, tables: OpTables | LoweredProgram, *,
-                 nu_kernel: bool = True, interpret: bool | None = None):
-        """``nu_kernel``: use the Pallas Neuron-Unit kernel (else pure
-        jnp ``lif_step_int``). ``interpret``: Pallas interpret mode;
-        defaults to True off-TPU."""
+    def __init__(self, g: SNNGraph, tables: OpTables | LoweredProgram,
+                 spec: ExecutionSpec | None = None, *,
+                 nu_kernel: bool | None = None,
+                 interpret: bool | None = None):
+        """``spec`` selects the kernel tier / interpret mode / donation
+        (:class:`~repro.core.execution.ExecutionSpec`); ``None`` is the
+        platform default (fused tier, interpret off-TPU).
+        ``nu_kernel=``/``interpret=`` are the deprecated pre-spec
+        kwargs and delegate with a ``DeprecationWarning``."""
+        if nu_kernel is not None or interpret is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated nu_kernel=/"
+                                "interpret= kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                nu_kernel=nu_kernel, interpret=interpret,
+                where="JaxMappedEngine", stacklevel=3)
+        spec = as_spec(spec).resolve()
+        if spec.engine != "jax" or spec.mesh is not None:
+            raise ValueError(
+                f"JaxMappedEngine is the single-device jax engine; got "
+                f"{spec} (meshes go through repro.serve.sharded)")
+        self.spec = spec
         self.lowered = (tables if isinstance(tables, LoweredProgram)
                         else lower_tables(g, tables))
         self.lif: LIFIntParams = g.lif
-        if interpret is None:
-            interpret = _default_interpret()
-        self._nu_kernel = nu_kernel
-        self._interpret = interpret
         self._fn = self._build()
-        self._run = jax.jit(self._fn)
+        # donate the membrane-state buffer (v0 -> v_final storage);
+        # s0 has no same-shaped output and would just warn
+        self._run = jax.jit(self._fn,
+                            donate_argnums=(1,) if spec.donate else ())
+        self._aot: dict[tuple[int, int], object] = {}
 
     @property
     def step_fn(self):
@@ -118,15 +149,29 @@ class JaxMappedEngine:
 
     def _build(self):
         lw, lif = self.lowered, self.lif
-        n_int = lw.n_internal
+        tier, interp = self.spec.kernel, self.spec.interpret
+        if tier == "fused":
+            # whole timestep in one Pallas launch over the packed
+            # dense plane — bit-exact vs the split pipeline (int32
+            # addition is associative; deterministic-commit, §4.2)
+            w = jnp.asarray(pack_dense(lw).weight)
+
+            def step(carry, ext_t):
+                v, s_prev = carry
+                s_all = jnp.concatenate([ext_t, s_prev], axis=1)
+                v_next, s, pkt = fused_step(s_all, v, w, lif,
+                                            interpret=interp)
+                return (v_next, s), (s, pkt)
+
+            return self._scan(step)
+
         op_pre = jnp.asarray(lw.op_pre)
         op_w = jnp.asarray(lw.op_weight, jnp.int32)
         accum = functools.partial(jax.ops.segment_sum,
                                   segment_ids=jnp.asarray(lw.op_post_local),
-                                  num_segments=n_int)
-        if self._nu_kernel:
-            nu = functools.partial(lif_update_int, p=lif,
-                                   interpret=self._interpret)
+                                  num_segments=lw.n_internal)
+        if tier == "lif":
+            nu = functools.partial(lif_update_int, p=lif, interpret=interp)
         else:
             nu = functools.partial(lif_step_int, p=lif)
 
@@ -144,6 +189,11 @@ class JaxMappedEngine:
             s = s.astype(jnp.int32)
             return (v_next, s), (s, pkt)
 
+        return self._scan(step)
+
+    @staticmethod
+    def _scan(step):
+
         def run(ext, v0, s0):
             # ext [B, T, n_inputs] -> scan is time-major
             (v, _), (spikes, pkts) = jax.lax.scan(
@@ -151,6 +201,38 @@ class JaxMappedEngine:
             return jnp.swapaxes(spikes, 0, 1), v, jnp.swapaxes(pkts, 0, 1)
 
         return run
+
+    # -- AOT ----------------------------------------------------------------
+
+    def precompile(self, batch_sizes, timesteps: int) -> list[tuple[int, int]]:
+        """AOT-compile the scan for each ``(batch, timesteps)`` shape.
+
+        Lowers + compiles via ``jit(...).lower(shapes).compile()`` and
+        stores the executables; :meth:`run` dispatches to a stored
+        executable when the incoming shape matches, so a precompiled
+        shape's first real request skips XLA tracing entirely. Returns
+        the shapes compiled by THIS call (already-warm shapes skip).
+        Idempotent; serving passes ``BatchPolicy.buckets`` here.
+        """
+        lw = self.lowered
+        compiled = []
+        for b in batch_sizes:
+            key = (int(b), int(timesteps))
+            if key in self._aot:
+                continue
+            ext = jax.ShapeDtypeStruct((key[0], key[1], lw.n_inputs),
+                                       jnp.int32)
+            st = jax.ShapeDtypeStruct((key[0], lw.n_internal), jnp.int32)
+            exe = self._run.lower(ext, st, st).compile()
+            # execute once on zeros: warms the one-time dispatch costs
+            # that live outside the executable (the jnp.zeros fills for
+            # these state shapes, host<->device transfer setup), so the
+            # first real request runs at steady-state latency
+            z = lambda s: jnp.zeros(s.shape, s.dtype)
+            jax.block_until_ready(exe(z(ext), z(st), z(st)))
+            self._aot[key] = exe
+            compiled.append(key)
+        return compiled
 
     # -- public API ---------------------------------------------------------
 
@@ -166,9 +248,13 @@ class JaxMappedEngine:
         """
         ext, squeeze = normalize_ext_spikes(ext_spikes,
                                             self.lowered.n_inputs)
-        zeros = jnp.zeros((ext.shape[0], self.lowered.n_internal),
-                          jnp.int32)
-        spikes, v, pkts = self._run(jnp.asarray(ext, jnp.int32), zeros, zeros)
+        shape = (ext.shape[0], self.lowered.n_internal)
+        fn = self._aot.get((ext.shape[0], ext.shape[1]), self._run)
+        # two distinct state buffers: under donation v0 and s0 must not
+        # alias one another
+        spikes, v, pkts = fn(jnp.asarray(ext, jnp.int32),
+                             jnp.zeros(shape, jnp.int32),
+                             jnp.zeros(shape, jnp.int32))
         return finalize_outputs(spikes, v, pkts, squeeze)
 
 
@@ -191,8 +277,10 @@ def run_mapped_batched(g: SNNGraph, tables: OpTables, ext_spikes: np.ndarray,
     """
     warnings.warn(
         "run_mapped_batched is deprecated and recompiles per call; use "
-        "repro.core.compile(...).run(ext, engine='jax')",
+        "repro.core.compile(...).run(ext)",
         DeprecationWarning, stacklevel=2)
-    eng = JaxMappedEngine(g, tables, nu_kernel=nu_kernel,
-                          interpret=interpret)
+    eng = JaxMappedEngine(
+        g, tables,
+        ExecutionSpec(kernel=_NU_KERNEL_TIER[bool(nu_kernel)],
+                      interpret=interpret))
     return eng.run(ext_spikes)

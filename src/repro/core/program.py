@@ -9,9 +9,14 @@ scheduled :class:`~repro.core.schedule.OpTables`, the dense
 :class:`~repro.core.partition.PartitionResult`. Everything the rest of
 the repo needs hangs off that artifact:
 
-* ``program.run(ext, engine="jax"|"python"|"oracle")`` — uniform
-  ``[T, n_inputs]`` / ``[B, T, n_inputs]`` input shapes and a uniform
-  ``(spikes, v_final, stats)`` return across all three executors;
+* ``program.run(ext, spec)`` — uniform ``[T, n_inputs]`` /
+  ``[B, T, n_inputs]`` input shapes and a uniform
+  ``(spikes, v_final, stats)`` return across all executors; ``spec``
+  is an :class:`~repro.core.execution.ExecutionSpec` (or an
+  engine-name string ``"jax"|"python"|"oracle"``) naming engine,
+  kernel tier, interpret mode, mesh, and donation in ONE value. The
+  pre-spec kwargs (``engine=, nu_kernel=, interpret=, sharded=,
+  mesh=``) survive as deprecated delegating shims;
 * ``program.profile(stats)`` — CycleModel latency + energy and the
   FPGA resource report in one :class:`ProfileReport`;
 * ``program.init_packets()`` — the MC-tree configuration stream;
@@ -21,9 +26,13 @@ the repo needs hangs off that artifact:
   partitioner.
 
 JAX engines are owned, lazily-built members of the artifact, keyed on
-their *resolved* build options — there is no module-level engine cache
-(the old ``id()``-keyed one could alias recycled ids and duplicated
-engines for ``interpret=None`` vs its resolved value).
+the **resolved** :class:`~repro.core.execution.ExecutionSpec` — there
+is no module-level engine cache (the old ``id()``-keyed one could
+alias recycled ids and duplicated engines for ``interpret=None`` vs
+its resolved value). ``program.precompile(buckets, T)`` AOT-compiles
+the serving shapes and enables the persistent XLA cache
+(:mod:`repro.core.aot`), so loaded artifacts serve their first
+request without paying XLA.
 """
 from __future__ import annotations
 
@@ -39,6 +48,8 @@ from repro.core.engine import (CycleModel, CycleReport, PowerModel,
                                oracle_packet_counts, packet_stats,
                                run_mapped, run_oracle)
 from repro.core.engine_jax import JaxMappedEngine
+from repro.core.execution import (AUTO_MESH, ENGINES, ExecutionSpec, as_spec,
+                                  spec_from_legacy_kwargs)
 from repro.core.graph import SNNGraph, from_quantized
 from repro.core.memory_model import HardwareConfig
 from repro.core.mapping.search import SearchConfig, SearchTrace
@@ -48,13 +59,10 @@ from repro.core.passes import (CompileReport, build_report,
                                partition_pass, schedule_pass, search_pass,
                                validate_pass)
 from repro.core.scheduling import LoweredProgram, OpTables
-from repro.kernels.ops import _default_interpret
 from repro.snn.quantize import QuantizedSNN
 
 PROGRAM_FORMAT = "suprasnn-program"
 PROGRAM_FORMAT_VERSION = 1
-
-ENGINES = ("jax", "python", "oracle")
 
 
 @dataclasses.dataclass
@@ -137,75 +145,145 @@ class Program:
 
     # -- engines ------------------------------------------------------------
 
-    def engine(self, *, nu_kernel: bool = True,
+    def engine(self, spec: ExecutionSpec | None = None, *,
+               nu_kernel: bool | None = None,
                interpret: bool | None = None) -> JaxMappedEngine:
-        """The owned compiled executor for these build options.
+        """The owned compiled single-device executor for ``spec``.
 
-        ``interpret=None`` resolves to the platform default BEFORE
-        keying, so explicit and default values share one engine.
-        Engines build lazily from the already-lowered program and live
-        as long as the artifact.
+        The spec is resolved (platform defaults folded in) BEFORE
+        keying, so an explicit value and the default it resolves to
+        share one engine. Engines build lazily from the
+        already-lowered program and live as long as the artifact.
+        ``nu_kernel=``/``interpret=`` are the deprecated pre-spec
+        kwargs.
         """
-        key = (bool(nu_kernel),
-               _default_interpret() if interpret is None else bool(interpret))
-        eng = self._engines.get(key)
+        if nu_kernel is not None or interpret is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated nu_kernel=/"
+                                "interpret= kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                nu_kernel=nu_kernel, interpret=interpret,
+                where="Program.engine", stacklevel=3)
+        spec = as_spec(spec).resolve().single_device()
+        if spec.engine != "jax":
+            raise ValueError(f"Program.engine builds the jax engine; got "
+                             f"engine={spec.engine!r}")
+        eng = self._engines.get(spec)
         if eng is None:
-            eng = JaxMappedEngine(self.graph, self.lowered,
-                                  nu_kernel=key[0], interpret=key[1])
-            self._engines[key] = eng
+            eng = JaxMappedEngine(self.graph, self.lowered, spec)
+            self._engines[spec] = eng
         return eng
 
-    def sharded_runner(self, mesh=None, *, nu_kernel: bool = True,
+    def sharded_runner(self, spec=None, *, nu_kernel: bool | None = None,
                        interpret: bool | None = None):
-        """The owned multi-device runner for these build options.
+        """The owned multi-device runner for ``spec``.
 
-        Wraps the owned engine in ``shard_map`` over ``mesh`` (default:
-        every device on the ``data`` axis) — see
-        :mod:`repro.serve.sharded`. Runners are cached like engines:
-        same (mesh, resolved build options) -> same object.
+        ``spec`` may be an :class:`ExecutionSpec` (``mesh=None`` means
+        the default serving mesh here), a bare jax ``Mesh``, or
+        ``None`` (default mesh). Wraps the owned engine in
+        ``shard_map`` — see :mod:`repro.serve.sharded`. Runners are
+        cached like engines: same resolved spec -> same object.
+        ``nu_kernel=``/``interpret=`` are the deprecated pre-spec
+        kwargs.
         """
         from repro.serve.sharded import ShardedRunner
-        key = ("sharded", mesh, bool(nu_kernel),
-               _default_interpret() if interpret is None else bool(interpret))
-        runner = self._engines.get(key)
+        mesh = None
+        if spec is not None and not isinstance(spec, ExecutionSpec):
+            mesh, spec = spec, None         # bare-Mesh convenience form
+        if nu_kernel is not None or interpret is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated nu_kernel=/"
+                                "interpret= kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                sharded=True, mesh=mesh, nu_kernel=nu_kernel,
+                interpret=interpret, where="Program.sharded_runner",
+                stacklevel=3)
+        elif spec is None:
+            spec = ExecutionSpec(mesh=mesh if mesh is not None else AUTO_MESH)
+        if spec.mesh is None:
+            spec = dataclasses.replace(spec, mesh=AUTO_MESH)
+        spec = spec.resolve()
+        runner = self._engines.get(spec)
         if runner is None:
-            runner = ShardedRunner(self, mesh, nu_kernel=nu_kernel,
-                                   interpret=interpret)
-            self._engines[key] = runner
+            runner = ShardedRunner(self, spec=spec)
+            self._engines[spec] = runner
         return runner
+
+    # -- AOT ----------------------------------------------------------------
+
+    def precompile(self, batch_sizes, timesteps: int,
+                   spec: ExecutionSpec | None = None) -> list:
+        """AOT-compile the jax engine for every serving shape NOW.
+
+        ``batch_sizes`` is a :class:`~repro.serve.batcher.BatchPolicy`
+        or an iterable of batch sizes (the padded buckets serving can
+        dispatch); ``timesteps`` fixes the T axis. Also enables the
+        persistent XLA cache (:mod:`repro.core.aot`), so restarted
+        processes reuse these compilations from disk. Returns the
+        shapes compiled by this call; idempotent per engine.
+        """
+        from repro.core.aot import enable_persistent_cache, normalize_buckets
+        enable_persistent_cache()
+        spec = as_spec(spec).resolve()
+        if spec.engine != "jax":
+            raise ValueError(f"precompile targets the jax engine; got "
+                             f"engine={spec.engine!r}")
+        target = (self.sharded_runner(spec) if spec.sharded
+                  else self.engine(spec))
+        return target.precompile(normalize_buckets(batch_sizes), timesteps)
+
+    def content_hash(self) -> str:
+        """SHA-256 over the lowered program + LIF params — the stable
+        identity of the compiled computation (:mod:`repro.core.aot`)."""
+        from repro.core.aot import content_hash
+        return content_hash(self)
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, ext_spikes: np.ndarray, *, engine: str | None = None,
-            nu_kernel: bool = True, interpret: bool | None = None,
-            sharded: bool = False, mesh=None
-            ) -> tuple[np.ndarray, np.ndarray, dict]:
+    def run(self, ext_spikes: np.ndarray,
+            spec: "ExecutionSpec | str | None" = None, *,
+            engine: str | None = None, nu_kernel: bool | None = None,
+            interpret: bool | None = None, sharded: bool | None = None,
+            mesh=None) -> tuple[np.ndarray, np.ndarray, dict]:
         """Execute the program on a spike train (batch).
 
         ext_spikes: binary ``[T, n_inputs]`` or ``[B, T, n_inputs]``.
-        engine: ``"jax"`` (compiled batched), ``"python"`` (per-op
-        reference executor), or ``"oracle"`` (dense integer LIF);
-        defaults to ``self.default_engine``. All three return
-        ``(spikes, v_final, stats)`` with matching shapes —
-        ``[T, n_internal]`` / ``[n_internal]`` / packet_counts ``[T]``,
-        batched with a leading ``B`` — and identical bits.
+        spec: an :class:`~repro.core.execution.ExecutionSpec`, an
+        engine-name string (``"jax"`` compiled batched, ``"python"``
+        per-op reference executor, ``"oracle"`` dense integer LIF), or
+        ``None`` for ``self.default_engine``. All engines and kernel
+        tiers return ``(spikes, v_final, stats)`` with matching shapes
+        — ``[T, n_internal]`` / ``[n_internal]`` / packet_counts
+        ``[T]``, batched with a leading ``B`` — and identical bits.
 
-        ``sharded=True`` data-parallelizes the batch axis over a jax
-        mesh (``mesh``, default every device on ``data``) through the
-        owned :class:`~repro.serve.sharded.ShardedRunner` — jax engine
-        only, outputs bit-exact vs the single-device run (ragged
-        batches pad-and-mask).
+        ``ExecutionSpec(mesh=...)`` data-parallelizes the batch axis
+        over a jax mesh through the owned
+        :class:`~repro.serve.sharded.ShardedRunner` — jax engine only,
+        outputs bit-exact vs the single-device run (ragged batches
+        pad-and-mask; tiny batches fall back to one device).
+
+        ``engine=/nu_kernel=/interpret=/sharded=/mesh=`` are the
+        deprecated pre-spec kwargs and delegate with a
+        ``DeprecationWarning`` (see README, 'Migration to
+        ExecutionSpec').
         """
-        engine = engine or ("jax" if sharded else self.default_engine)
-        if sharded:
-            if engine != "jax":
-                raise ValueError(f"sharded=True runs the jax engine; got "
-                                 f"engine={engine!r}")
-            return self.sharded_runner(mesh, nu_kernel=nu_kernel,
-                                       interpret=interpret).run(ext_spikes)
-        if engine not in ENGINES:
-            raise ValueError(f"unknown engine {engine!r}; use one of "
-                             f"{ENGINES}")
+        if (engine is not None or nu_kernel is not None
+                or interpret is not None or sharded is not None
+                or mesh is not None):
+            if spec is not None:
+                raise TypeError("pass spec OR the deprecated engine=/"
+                                "nu_kernel=/interpret=/sharded=/mesh= "
+                                "kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                engine=engine, nu_kernel=nu_kernel, interpret=interpret,
+                sharded=sharded, mesh=mesh,
+                default_engine=self.default_engine)
+        spec = as_spec(spec, self.default_engine)
+        if spec.engine == "jax":
+            if spec.mesh is not None:
+                return self.sharded_runner(spec).run(ext_spikes)
+            return self.engine(spec).run(ext_spikes)
+
         ext = np.asarray(ext_spikes)
         squeeze = ext.ndim == 2
         if squeeze:
@@ -215,14 +293,10 @@ class Program:
                              f"[B, T, {self.graph.n_inputs}] or "
                              f"[T, {self.graph.n_inputs}]")
 
-        if engine == "jax":
-            return self.engine(nu_kernel=nu_kernel, interpret=interpret) \
-                .run(ext_spikes)
-
         spikes, vs, pkts = [], [], []
         for b in range(ext.shape[0]):
             e = ext[b].astype(np.int32)
-            if engine == "python":
+            if spec.engine == "python":
                 s, v, st = run_mapped(self.graph, self.tables, e,
                                       routing=self.lowered.routing)
                 p = st["packet_counts"]
@@ -338,8 +412,17 @@ class Program:
         return path
 
     @classmethod
-    def load(cls, path: str | Path) -> "Program":
-        """Load a saved artifact; rejects unknown formats/versions."""
+    def load(cls, path: str | Path, *, precompile=None,
+             timesteps: int | None = None,
+             spec: ExecutionSpec | None = None) -> "Program":
+        """Load a saved artifact; rejects unknown formats/versions.
+
+        ``precompile=`` (a :class:`~repro.serve.batcher.BatchPolicy`
+        or iterable of batch buckets, with ``timesteps=`` fixing the T
+        axis) AOT-compiles the jax engine for every serving shape at
+        load time — see :meth:`precompile` — so the artifact is warm
+        before its first request.
+        """
         with np.load(path) as z:
             if "header" not in z.files:
                 raise ValueError(f"{path}: not a {PROGRAM_FORMAT} artifact")
@@ -390,8 +473,15 @@ class Program:
             schedule_depths=rh.get("schedule_depths"))
         # re-lower (pure, deterministic) — never re-partition
         lowered = lower_pass(g, tables)
-        return cls(g, hw, tables, lowered, report, part,
+        prog = cls(g, hw, tables, lowered, report, part,
                    default_engine=header.get("default_engine", "jax"))
+        if precompile is not None:
+            if timesteps is None:
+                raise ValueError("Program.load(precompile=...) needs "
+                                 "timesteps= to fix the T axis of the AOT "
+                                 "shapes")
+            prog.precompile(precompile, timesteps, spec)
+        return prog
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,205 @@
+"""Fused per-timestep step megakernel — route + accumulate + Neuron Unit.
+
+The ``"lif"`` engine tier executes every timestep as three
+XLA-fused-but-distinct ops: a gather over the lowered op stream
+(multicast routing), a segment-sum (per-SPU weight accumulation merged
+by the ME tree), and the small Pallas LIF kernel (the centralized
+Neuron Unit) — round-tripping the spike plane and synaptic currents
+through HBM between each. This module collapses the whole timestep
+into ONE ``pallas_call``, mirroring the decoupled-SPU / unified-NU
+dataflow SupraSNN implements in hardware (Fig. 7): spikes stream in,
+currents accumulate on-chip, membrane state updates in place.
+
+Memory layout (DESIGN.md §10):
+
+* the lowered op stream is **densified** once per engine into a weight
+  plane ``W[n_neurons, n_internal]`` with ``W[q, p] = Σ weight`` over
+  all (q -> p) synapses, packed to the narrowest signed dtype that
+  holds every entry (int8 for the paper's 4-bit MNIST net, int16 for
+  the 9-bit SHD net). The synaptic phase is then the exact int32
+  contraction ``current = s_all @ W`` — identical bits to the
+  segment-sum (int32 addition is associative; deterministic-commit
+  property, paper §4.2);
+* the grid is ``(batch blocks, post blocks, pre blocks)`` with the pre
+  (reduction) axis innermost; spike and weight tiles stream through
+  VMEM under Pallas's pipelined BlockSpec DMA (each next tile is
+  fetched while the current one multiplies — the double-buffered spike
+  plane of the hardware's distribution phase);
+* partial currents live in an int32 VMEM scratch accumulator; on the
+  LAST pre block the Neuron Unit epilogue runs in-register: shift-leak,
+  integrate, threshold, reset — one HBM read and one write per state
+  element for the whole timestep;
+* the membrane-state input is aliased onto the ``v_next`` output
+  (``input_output_aliases``), so the donated state buffer is updated
+  in place rather than reallocated every step;
+* MC packet counts (one packet per fired neuron, the distribution
+  phase of the cycle model) are counted from the same streamed spike
+  tiles at ``j == 0`` — the fused step emits them for free.
+
+Bit-exactness (spikes, potentials AND packet counts) vs the unfused
+tiers is pinned by ``tests/test_fused_kernel.py`` over feedforward +
+recurrent graphs, ragged batch sizes, random quantized nets
+(hypothesis) and the golden artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.snn.lif import LIFIntParams
+
+DEFAULT_BLOCK = (8, 128, 128)           # (batch, post, pre) tile
+
+# Densifying the op stream costs n_neurons * n_internal entries; past
+# this many bytes the fused tier refuses and the caller should stay on
+# the streaming "lif" tier (override via env for big-memory hosts).
+MAX_DENSE_BYTES = int(os.environ.get("SUPRASNN_FUSED_MAX_BYTES",
+                                     256 * 1024 * 1024))
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSynapses:
+    """The lowered op stream as a packed dense weight plane."""
+    weight: np.ndarray                  # [n_neurons, n_internal], int8/16/32
+    n_neurons: int
+    n_internal: int
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.weight.dtype
+
+
+def pack_dense(lowered) -> DenseSynapses:
+    """Densify a :class:`~repro.core.scheduling.LoweredProgram`.
+
+    Sums duplicate (pre, post) ops exactly (int32), then packs to the
+    narrowest signed dtype holding every SUMMED entry — the packing
+    check runs on the dense plane, not the raw weights, so two int8
+    synapses folding into a >int8 entry still pack correctly wider.
+    """
+    n, m = lowered.n_neurons, lowered.n_internal
+    if n * m * 4 > MAX_DENSE_BYTES:
+        raise ValueError(
+            f"fused kernel tier would densify {n}x{m} weights "
+            f"(> {MAX_DENSE_BYTES} bytes); use kernel='lif' for this "
+            f"graph or raise SUPRASNN_FUSED_MAX_BYTES")
+    w = np.zeros((n, m), np.int32)
+    np.add.at(w, (lowered.op_pre, lowered.op_post_local), lowered.op_weight)
+    for dt in (np.int8, np.int16):
+        info = np.iinfo(dt)
+        if info.min <= w.min() and w.max() <= info.max:
+            w = w.astype(dt)
+            break
+    return DenseSynapses(weight=w, n_neurons=n, n_internal=m)
+
+
+# ---------------------------------------------------------------------------
+# The kernel body.
+# ---------------------------------------------------------------------------
+
+def _kernel(s_ref, w_ref, v_ref, v_out_ref, s_out_ref, pkt_ref,
+            acc_ref, pkt_acc_ref, *, leak_shift, v_th, v_reset, nk):
+    j, k = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init_pkt():
+        pkt_acc_ref[...] = jnp.zeros_like(pkt_acc_ref)
+
+    # synaptic phase: exact int32 contraction of the streamed spike
+    # tile with the packed weight tile (== segment-sum == ME tree)
+    s_blk = s_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        s_blk, w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    # distribution phase: one MC packet per fired neuron; count once
+    # per pre tile (j == 0 — the count is independent of the post tile)
+    @pl.when(j == 0)
+    def _count_packets():
+        pkt_acc_ref[...] += jnp.sum((s_blk != 0).astype(jnp.int32),
+                                    axis=1, keepdims=True)
+
+    # Neuron Unit epilogue on the last pre tile: shift-leak, integrate,
+    # threshold, reset — in-register, one state read + one write
+    @pl.when(k == nk - 1)
+    def _neuron_unit():
+        v = v_ref[...]
+        v_upd = (v - jax.lax.shift_right_arithmetic(
+            v, jnp.int32(leak_shift))) + acc_ref[...]
+        spike = v_upd >= v_th
+        v_out_ref[...] = jnp.where(spike, jnp.asarray(v_reset, v.dtype),
+                                   v_upd)
+        s_out_ref[...] = spike.astype(jnp.int32)
+
+    @pl.when((j == 0) & (k == nk - 1))
+    def _emit_packets():
+        pkt_ref[...] = pkt_acc_ref[...]
+
+
+def fused_step(s_all: jax.Array, v: jax.Array, weight: jax.Array,
+               p: LIFIntParams, *,
+               block: tuple[int, int, int] | None = None,
+               interpret: bool = True
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused timestep: ``(v_next, spikes, packet_counts)``.
+
+    s_all:  [B, n_neurons] int32 spike plane (external ‖ internal t-1).
+    v:      [B, n_internal] int32 membrane state — aliased onto the
+            ``v_next`` output, so pass a donated/owned buffer.
+    weight: [n_neurons, n_internal] packed dense plane
+            (:func:`pack_dense`); any signed int dtype, accumulated
+            in int32.
+
+    ``block=None`` resolves per backend: the (8, 128, 128) VMEM tiling
+    on real TPU, but ONE full-array tile (grid ``(1, 1, 1)``) under
+    interpret mode — the interpreter walks the grid in Python, so on
+    CPU the single-tile kernel lowers to one XLA dot + epilogue
+    instead of hundreds of emulated DMA steps. Tiling only changes the
+    visit order of an associative int32 reduction, so every block
+    choice is bit-exact (pinned in tests/test_fused_kernel.py).
+
+    Pad lanes are all-zero spikes / zero weights / zero potentials:
+    they contribute nothing to real currents and are sliced off before
+    return, so a non-positive threshold spiking the padding is
+    harmless (same rule as ``lif_update_int``).
+    """
+    b, n_all = s_all.shape
+    n_int = v.shape[1]
+    if block is None:
+        block = (b, n_int, n_all) if interpret else DEFAULT_BLOCK
+    bb, bn, bk = block
+    sp = jnp.pad(s_all, ((0, -b % bb), (0, -n_all % bk)))
+    vp = jnp.pad(v, ((0, -b % bb), (0, -n_int % bn)))
+    wp = jnp.pad(weight, ((0, -n_all % bk), (0, -n_int % bn)))
+    nb, nj, nk = sp.shape[0] // bb, vp.shape[1] // bn, sp.shape[1] // bk
+    kernel = functools.partial(_kernel, leak_shift=p.leak_shift,
+                               v_th=p.v_threshold, v_reset=p.v_reset, nk=nk)
+    v_next, s_out, pkt = pl.pallas_call(
+        kernel,
+        grid=(nb, nj, nk),              # pre (reduction) axis innermost
+        in_specs=[pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+                  pl.BlockSpec((bb, bn), lambda i, j, k: (i, j))],
+        out_specs=[pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(vp.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(vp.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((sp.shape[0], 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.int32),
+                        pltpu.VMEM((bb, 1), jnp.int32)],
+        input_output_aliases={2: 0},    # v updates in place (donation)
+        interpret=interpret,
+    )(sp, wp, vp)
+    return v_next[:b, :n_int], s_out[:b, :n_int], pkt[:b, 0]

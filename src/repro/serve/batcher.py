@@ -168,6 +168,27 @@ class MicroBatcher:
             raise ValueError("need a service_model when there is no runner "
                              "to measure (simulation-only batcher)")
 
+    def _warm_buckets(self, sample_shape: tuple, dtype) -> None:
+        """Warm one compilation per policy bucket (measured mode).
+
+        Preferred path: the runner's ``precompile(buckets, timesteps)``
+        hook — the same AOT layer ``Program.load``/registry insert use
+        (:mod:`repro.core.aot`), which lowers + compiles without
+        executing anything. Exposed by ``Program.run`` /
+        ``ShardedRunner.run`` bound methods and registry runners;
+        plain-function runners fall back to throwaway zero-batch
+        calls.
+        """
+        pre = getattr(self.runner, "precompile", None)
+        if pre is None:
+            owner = getattr(self.runner, "__self__", None)
+            pre = getattr(owner, "precompile", None)
+        if pre is not None:
+            pre(self.policy.buckets, sample_shape[0])
+            return
+        for b in self.policy.buckets:
+            self.runner(np.zeros((b,) + sample_shape, dtype))
+
     # -- queue simulation ---------------------------------------------------
 
     def _admit(self, arrivals: np.ndarray, i: int, clock: float
@@ -218,9 +239,7 @@ class MicroBatcher:
                 and len(arrivals)):
             # measured mode: warm one engine compilation per bucket so
             # jit time never counts as service time on the first hit
-            for b in self.policy.buckets:
-                self.runner(np.zeros((b,) + requests.shape[1:],
-                                     requests.dtype))
+            self._warm_buckets(requests.shape[1:], requests.dtype)
         n_total = len(arrivals)
         lat = np.zeros(n_total)
         disp = np.zeros(n_total)

@@ -3,15 +3,25 @@
 A serving process loads each model artifact once (``Program.load`` —
 never re-partitioning) and registers it under a unique name. Engine
 ownership stays **per model**: compiled engines and sharded runners
-live on each ``Program`` (lazily built, keyed on resolved build
-options), so two registered models never share or evict each other's
-compilations, and re-resolving a runner for the same model returns the
-same object.
+live on each ``Program`` (lazily built, keyed on the resolved
+:class:`~repro.core.execution.ExecutionSpec`), so two registered
+models never share or evict each other's compilations, and
+re-resolving a runner for the same model returns the same object.
+
+Cold start is killed at insert time: ``register``/``load`` accept
+``precompile=`` (a :class:`~repro.serve.batcher.BatchPolicy` or
+iterable of batch buckets, with ``timesteps=``) and AOT-compile every
+serving shape through :meth:`Program.precompile` before the model
+takes its first request — the same code path the
+:class:`~repro.serve.batcher.MicroBatcher` uses for drain-time
+warming.
 """
 from __future__ import annotations
 
 from pathlib import Path
 
+from repro.core.execution import (ExecutionSpec, as_spec,
+                                  spec_from_legacy_kwargs)
 from repro.core.program import Program
 
 
@@ -23,19 +33,37 @@ class ProgramRegistry:
 
     # -- registration -------------------------------------------------------
 
-    def register(self, name: str, program: Program) -> Program:
-        """Register a loaded program; duplicate names are rejected."""
+    def register(self, name: str, program: Program, *, precompile=None,
+                 timesteps: int | None = None,
+                 spec: ExecutionSpec | None = None) -> Program:
+        """Register a loaded program; duplicate names are rejected.
+
+        ``precompile=`` AOT-compiles the given batch buckets (padded
+        shapes, ``timesteps`` fixing the T axis) for ``spec`` at
+        insert time — see :meth:`Program.precompile`.
+        """
         if not name:
             raise ValueError("model name must be non-empty")
         if name in self._programs:
             raise ValueError(f"model {name!r} already registered; "
                              "unregister it first to replace")
+        if precompile is not None:
+            if timesteps is None:
+                raise ValueError("register(precompile=...) needs timesteps= "
+                                 "to fix the T axis of the AOT shapes")
+            program.precompile(precompile, timesteps, spec)
         self._programs[name] = program
         return program
 
-    def load(self, name: str, path: str | Path) -> Program:
-        """``Program.load`` an artifact and register it under ``name``."""
-        return self.register(name, Program.load(path))
+    def load(self, name: str, path: str | Path, *, precompile=None,
+             timesteps: int | None = None,
+             spec: ExecutionSpec | None = None) -> Program:
+        """``Program.load`` an artifact and register it under ``name``
+        (AOT-precompiling the serving shapes when ``precompile=`` is
+        given)."""
+        return self.register(name, Program.load(path),
+                             precompile=precompile, timesteps=timesteps,
+                             spec=spec)
 
     def unregister(self, name: str) -> Program:
         if name not in self._programs:
@@ -62,14 +90,38 @@ class ProgramRegistry:
 
     # -- per-model runners --------------------------------------------------
 
-    def runner(self, name: str, *, sharded: bool = False, mesh=None):
+    def runner(self, name: str, spec: ExecutionSpec | None = None, *,
+               sharded: bool | None = None, mesh=None):
         """The model's batch-callable: ``[b, T, n_in] -> (s, v, stats)``.
 
         Resolves to the program's owned engine (or owned sharded
-        runner) — repeated calls reuse the same compiled object, and
-        distinct models own distinct engines.
+        runner when ``spec.mesh`` is set) — repeated calls reuse the
+        same compiled object, and distinct models own distinct
+        engines. The returned callable carries a ``precompile(buckets,
+        timesteps)`` hook for AOT warming. ``sharded=``/``mesh=`` are
+        the deprecated pre-spec kwargs.
         """
         program = self.get(name)
-        if sharded:
-            return program.sharded_runner(mesh).run
-        return program.run
+        if sharded is not None or mesh is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated sharded=/"
+                                "mesh= kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                sharded=sharded, mesh=mesh,
+                where="ProgramRegistry.runner", stacklevel=3)
+        if spec is None:
+            return program.run              # default-spec bound method
+        spec = as_spec(spec)
+        if spec.engine == "jax" and spec.mesh is not None:
+            return program.sharded_runner(spec).run
+
+        def call(ext):
+            return program.run(ext, spec)
+
+        if spec.engine == "jax":            # nothing to AOT-warm otherwise
+
+            def precompile(batch_sizes, timesteps):
+                return program.precompile(batch_sizes, timesteps, spec)
+
+            call.precompile = precompile
+        return call

@@ -32,20 +32,30 @@ class Server:
 
     policy: default :class:`BatchPolicy`; ``policies`` overrides it per
     model name. ``service_model`` (bucket -> us) makes latencies
-    deterministic; ``None`` measures real engine calls. ``sharded``
-    routes every model through its owned multi-device runner.
+    deterministic; ``None`` measures real engine calls. ``spec`` (an
+    :class:`~repro.core.execution.ExecutionSpec`) routes every model
+    through that execution point — e.g. ``ExecutionSpec(mesh="auto")``
+    for the owned multi-device runner. ``sharded=``/``mesh=`` are the
+    deprecated pre-spec kwargs.
     """
 
     def __init__(self, registry: ProgramRegistry, *,
                  policy: BatchPolicy | None = None,
                  policies: dict[str, BatchPolicy] | None = None,
-                 service_model=None, sharded: bool = False, mesh=None):
+                 service_model=None, spec=None, sharded: bool | None = None,
+                 mesh=None):
+        if sharded is not None or mesh is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated sharded=/"
+                                "mesh= kwargs, not both")
+            from repro.core.execution import spec_from_legacy_kwargs
+            spec = spec_from_legacy_kwargs(sharded=sharded, mesh=mesh,
+                                           where="Server", stacklevel=3)
         self.registry = registry
         self.policy = policy or BatchPolicy()
         self.policies = dict(policies or {})
         self.service_model = service_model
-        self.sharded = sharded
-        self.mesh = mesh
+        self.spec = spec
         self.last_results: dict[str, DrainResult] = {}
 
     def serve(self, stream: list[Request]) -> dict:
@@ -65,8 +75,7 @@ class Server:
         self.last_results = {}
         metrics: dict = {"models": {}}
         for name, reqs in by_model.items():
-            runner = self.registry.runner(name, sharded=self.sharded,
-                                          mesh=self.mesh)
+            runner = self.registry.runner(name, self.spec)
             batcher = MicroBatcher(self.policies.get(name, self.policy),
                                    runner=runner,
                                    service_model=self.service_model)

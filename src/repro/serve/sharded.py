@@ -21,12 +21,22 @@ Why the result is bit-exact vs the single-device engine:
   and packet counts before stats are computed — zero-input pad samples
   never touch the real rows.
 
+Tiny batches don't shard well: below ``n_shards * min_shard`` real
+samples, per-device dispatch overhead exceeds the parallel win (the
+``serve.sharded.dispatch_us`` benchmark row measures it), so
+:meth:`ShardedRunner.run` routes such batches through the program's
+owned single-device engine — bit-exact by the argument above, just
+cheaper. ``min_shard=0`` disables the fallback (conformance tests use
+it to force the true shard path at every size).
+
 On CPU, CI forces >= 8 virtual devices via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see the
 ``serving`` lane); with a single device the mesh degenerates to one
 shard and the runner is still exact, so the same tests run everywhere.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +45,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.engine_jax import finalize_outputs, normalize_ext_spikes
+from repro.core.execution import (AUTO_MESH, ExecutionSpec,
+                                  spec_from_legacy_kwargs)
 
 
 class ShardedRunner:
@@ -44,34 +56,99 @@ class ShardedRunner:
     ``shard_map`` + ``jit``; :meth:`run` then serves any batch —
     including ragged ones that do not divide the shard count — with
     outputs bit-exact vs ``program.run(ext)`` on one device.
+
+    ``spec`` is an :class:`~repro.core.execution.ExecutionSpec`
+    (``mesh=None`` means the default serving mesh here); the bare
+    ``mesh`` positional and the ``nu_kernel=``/``interpret=`` kwargs
+    are the deprecated pre-spec surface.
     """
 
-    def __init__(self, program, mesh=None, *, nu_kernel: bool = True,
-                 interpret: bool | None = None):
-        if mesh is None:
-            from repro.launch.mesh import make_serving_mesh
-            mesh = make_serving_mesh()
+    def __init__(self, program, mesh=None, *,
+                 spec: ExecutionSpec | None = None,
+                 nu_kernel: bool | None = None,
+                 interpret: bool | None = None, min_shard: int = 1):
+        if nu_kernel is not None or interpret is not None:
+            if spec is not None:
+                raise TypeError("pass spec= OR the deprecated nu_kernel=/"
+                                "interpret= kwargs, not both")
+            spec = spec_from_legacy_kwargs(
+                sharded=True, mesh=mesh, nu_kernel=nu_kernel,
+                interpret=interpret, where="ShardedRunner", stacklevel=3)
+        elif spec is None:
+            spec = ExecutionSpec(mesh=mesh if mesh is not None else AUTO_MESH)
+        elif mesh is not None:
+            raise TypeError("pass the mesh inside spec=, not alongside it")
+        if spec.mesh is None:
+            spec = dataclasses.replace(spec, mesh=AUTO_MESH)
+        spec = spec.resolve()
+        mesh = spec.mesh
         if "data" not in mesh.axis_names:
             raise ValueError(f"mesh axes {mesh.axis_names} lack 'data'; "
                              "the batch axis shards over 'data' "
                              "(launch.mesh.make_serving_mesh)")
+        self.spec = spec
         self.mesh = mesh
         self.n_shards = int(mesh.shape["data"])
-        engine = program.engine(nu_kernel=nu_kernel, interpret=interpret)
-        self._n_inputs = engine.lowered.n_inputs
-        self._n_internal = engine.lowered.n_internal
-        spec = P("data")
+        self.min_shard = int(min_shard)
+        # the per-device engine IS the program's owned single-device
+        # engine for this spec — the fallback and the shard path share
+        # one compiled scan body
+        self._engine = program.engine(spec.single_device())
+        self._n_inputs = self._engine.lowered.n_inputs
+        self._n_internal = self._engine.lowered.n_internal
+        pspec = P("data")
         # check_rep=False: the Pallas NU kernel has no replication rule;
         # every output is batch-sharded anyway, nothing is replicated.
-        self._run = jax.jit(shard_map(
-            engine.step_fn, mesh=mesh,
-            in_specs=(spec, spec, spec), out_specs=(spec, spec, spec),
-            check_rep=False))
+        self._run = jax.jit(
+            shard_map(self._engine.step_fn, mesh=mesh,
+                      in_specs=(pspec, pspec, pspec),
+                      out_specs=(pspec, pspec, pspec), check_rep=False),
+            donate_argnums=(1,) if spec.donate else ())
+        self._aot: dict[tuple[int, int], object] = {}
 
     def padded_size(self, b: int) -> int:
         """Next multiple of the shard count (the pad-and-mask bucket)."""
         d = self.n_shards
         return ((b + d - 1) // d) * d
+
+    def _use_fallback(self, b: int) -> bool:
+        """True when ``b`` real samples go single-device (see module
+        docstring): fewer than ``min_shard`` samples per shard."""
+        return b < self.n_shards * self.min_shard
+
+    # -- AOT ----------------------------------------------------------------
+
+    def precompile(self, batch_sizes, timesteps: int
+                   ) -> list[tuple[int, int]]:
+        """AOT-compile every serving shape, mirroring :meth:`run`'s
+        routing: fallback-sized buckets warm the single-device engine,
+        the rest warm the sharded scan at their PADDED size (so two
+        buckets padding to the same multiple compile once). Returns
+        the shapes compiled by this call.
+        """
+        compiled = []
+        for b in batch_sizes:
+            b = int(b)
+            if self._use_fallback(b):
+                compiled.extend(self._engine.precompile([b], timesteps))
+                continue
+            key = (self.padded_size(b), int(timesteps))
+            if key in self._aot:
+                continue
+            ext = jax.ShapeDtypeStruct((key[0], key[1], self._n_inputs),
+                                       jnp.int32)
+            st = jax.ShapeDtypeStruct((key[0], self._n_internal), jnp.int32)
+            exe = self._run.lower(ext, st, st).compile()
+            # one throwaway zero-batch execution warms the dispatch
+            # costs outside the executable (state-buffer fills, device
+            # placement) — first real request then runs steady-state
+            z = lambda s: jnp.zeros(s.shape, s.dtype)
+            jax.block_until_ready(exe(z(ext), z(st), z(st)))
+            self._aot[key] = exe
+            compiled.append(key)
+        return compiled
+
+    # -- public API ---------------------------------------------------------
 
     def run(self, ext_spikes: np.ndarray
             ) -> tuple[np.ndarray, np.ndarray, dict]:
@@ -83,21 +160,28 @@ class ShardedRunner:
         """
         ext, squeeze = normalize_ext_spikes(ext_spikes, self._n_inputs)
         b, t = ext.shape[0], ext.shape[1]
+        if self._use_fallback(b):
+            return self._engine.run(ext_spikes)
         full = self.padded_size(b)
         if full != b:                      # pad: all-zero samples
             pad = np.zeros((full - b, t, self._n_inputs), ext.dtype)
             ext = np.concatenate([ext, pad])
-        zeros = jnp.zeros((full, self._n_internal), jnp.int32)
-        spikes, v, pkts = self._run(jnp.asarray(ext, jnp.int32),
-                                    zeros, zeros)
+        shape = (full, self._n_internal)
+        fn = self._aot.get((full, t), self._run)
+        # two distinct state buffers: under donation v0/s0 must not alias
+        spikes, v, pkts = fn(jnp.asarray(ext, jnp.int32),
+                             jnp.zeros(shape, jnp.int32),
+                             jnp.zeros(shape, jnp.int32))
         # mask: drop the pad rows before any stats are derived
         return finalize_outputs(np.asarray(spikes)[:b], np.asarray(v)[:b],
                                 np.asarray(pkts)[:b], squeeze)
 
 
-def sharded_runner(program, mesh=None, *, nu_kernel: bool = True,
-                   interpret: bool | None = None) -> ShardedRunner:
+def sharded_runner(program, mesh=None, *, spec: ExecutionSpec | None = None,
+                   nu_kernel: bool | None = None,
+                   interpret: bool | None = None,
+                   min_shard: int = 1) -> ShardedRunner:
     """Build a :class:`ShardedRunner` for ``program`` (default mesh:
     every device on the ``data`` axis)."""
-    return ShardedRunner(program, mesh, nu_kernel=nu_kernel,
-                         interpret=interpret)
+    return ShardedRunner(program, mesh, spec=spec, nu_kernel=nu_kernel,
+                         interpret=interpret, min_shard=min_shard)

@@ -11,21 +11,22 @@ import pytest
 from conftest import make_ext, make_feedforward, make_hw
 from repro.configs.snn_paper import mnist_scale_random_graph
 from repro.core import compile as program_compile
-from repro.core import (JaxMappedEngine, lower_tables, random_graph,
-                        run_mapped, run_mapped_batched, run_oracle)
+from repro.core import (ExecutionSpec, JaxMappedEngine, KERNELS,
+                        lower_tables, random_graph, run_mapped,
+                        run_mapped_batched, run_oracle)
 
 
 _hw, _feedforward, _ext = make_hw, make_feedforward, make_ext
 
 
-@pytest.mark.parametrize("nu_kernel", [True, False],
-                         ids=["pallas_nu", "jnp_nu"])
-def test_recurrent_batched_bit_exact_vs_oracle(nu_kernel):
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_recurrent_batched_bit_exact_vs_oracle(kernel):
     g = random_graph(12, 20, 160, seed=3)   # pre spans inputs AND internal
     assert (g.pre >= g.n_inputs).any(), "graph must contain recurrence"
     tables = program_compile(g, _hw(g), max_iters=4000).tables
     ext = _ext(g, b=4, t=9, seed=1)
-    s, v, _ = JaxMappedEngine(g, tables, nu_kernel=nu_kernel).run(ext)
+    s, v, _ = JaxMappedEngine(g, tables,
+                              ExecutionSpec(kernel=kernel)).run(ext)
     for b in range(ext.shape[0]):
         s_ref, v_ref = run_oracle(g, ext[b])
         np.testing.assert_array_equal(s[b], s_ref)

@@ -1,0 +1,207 @@
+"""Bit-exactness pins for the fused step megakernel (kernels/fused_step).
+
+The fused tier collapses routing + per-SPU accumulation + Neuron Unit
+into one pallas_call; the deterministic-commit property (paper §4.2)
+says it must be BIT-identical — spikes, final potentials AND per-step
+MC packet counts — to the unfused tiers and the dense oracle. Pinned
+here over feedforward + recurrent graphs at ragged batch sizes
+(1, D-1, D, 3D+1), random quantized nets (hypothesis), and the golden
+artifact re-run through the fused tier.
+"""
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_ext, make_feedforward, make_hw
+from repro.core import ExecutionSpec, JaxMappedEngine, Program, compile, \
+    lower_tables, random_graph, run_mapped, run_oracle
+from repro.kernels.fused_step import (DEFAULT_BLOCK, pack_dense,
+                                      fused_step)
+from repro.snn.lif import LIFIntParams
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # CI installs hypothesis; bare envs skip
+    HAVE_HYPOTHESIS = False
+
+GOLDEN = Path(__file__).parent / "golden"
+
+
+def _ragged_sizes():
+    d = len(jax.devices())
+    return sorted({1, max(1, d - 1), d, 3 * d + 1})
+
+
+def _recurrent(seed=3):
+    g = random_graph(12, 20, 160, seed=seed)
+    assert (g.pre >= g.n_inputs).any(), "graph must contain recurrence"
+    return g
+
+
+@pytest.fixture(scope="module")
+def ff_program():
+    g = make_feedforward()
+    return compile(g, make_hw(g), max_iters=4000)
+
+
+@pytest.fixture(scope="module")
+def rec_program():
+    g = _recurrent()
+    return compile(g, make_hw(g), max_iters=4000)
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused tiers: spikes, potentials, packet counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["feedforward", "recurrent"])
+def test_fused_bit_exact_vs_unfused_ragged_batches(kind, ff_program,
+                                                   rec_program):
+    program = ff_program if kind == "feedforward" else rec_program
+    g = program.graph
+    fused = ExecutionSpec(kernel="fused")
+    for b in _ragged_sizes():
+        ext = make_ext(g, b, 11, seed=b)
+        s_f, v_f, st_f = program.run(ext, fused)
+        for tier in ("lif", "reference"):
+            s_u, v_u, st_u = program.run(ext, ExecutionSpec(kernel=tier))
+            assert s_f.tobytes() == s_u.tobytes(), (tier, b)
+            assert v_f.tobytes() == v_u.tobytes(), (tier, b)
+            assert st_f["packet_counts"].tobytes() == \
+                st_u["packet_counts"].tobytes(), (tier, b)
+        # and vs the dense oracle + python reference executor
+        for i in range(b):
+            s_ref, v_ref = run_oracle(g, ext[i])
+            np.testing.assert_array_equal(s_f[i], s_ref)
+            np.testing.assert_array_equal(v_f[i], v_ref)
+            _, _, ref = run_mapped(g, program.tables, ext[i])
+            np.testing.assert_array_equal(st_f["packet_counts"][i],
+                                          ref["packet_counts"])
+
+
+def test_fused_is_the_default_tier(rec_program):
+    ext = make_ext(rec_program.graph, 2, 7, seed=0)
+    s_d, v_d, st_d = rec_program.run(ext)
+    s_f, v_f, st_f = rec_program.run(ext, ExecutionSpec(kernel="fused"))
+    assert rec_program.engine() is rec_program.engine(
+        ExecutionSpec(kernel="fused"))
+    assert s_d.tobytes() == s_f.tobytes()
+    assert v_d.tobytes() == v_f.tobytes()
+    np.testing.assert_array_equal(st_d["packet_counts"],
+                                  st_f["packet_counts"])
+
+
+def test_fused_step_handles_non_tile_multiples():
+    """Shapes straddling the (8, 128, 128) tile must pad-and-slice."""
+    g = random_graph(120, 140, 2500, seed=11)     # n_neurons=260 > 2 tiles
+    tables = compile(g, make_hw(g, m=8), max_iters=6000).tables
+    ext = make_ext(g, b=9, t=5, seed=2)           # 9 = one tile + 1
+    s_f, v_f, st_f = JaxMappedEngine(
+        g, tables, ExecutionSpec(kernel="fused")).run(ext)
+    s_u, v_u, st_u = JaxMappedEngine(
+        g, tables, ExecutionSpec(kernel="lif")).run(ext)
+    assert s_f.tobytes() == s_u.tobytes()
+    assert v_f.tobytes() == v_u.tobytes()
+    np.testing.assert_array_equal(st_f["packet_counts"],
+                                  st_u["packet_counts"])
+
+
+def test_fused_step_tiled_grid_matches_single_tile():
+    """The TPU (8, 128, 128) tiling (multi-step reduction grid, VMEM
+    scratch carries) must be bit-identical to the one-tile CPU path —
+    tiling only reorders an associative int32 reduction."""
+    rng = np.random.default_rng(0)
+    b, n_all, n_int = 9, 260, 140                 # straddles every axis
+    s_all = (rng.random((b, n_all)) < 0.4).astype(np.int32)
+    v = rng.integers(-40, 40, (b, n_int)).astype(np.int32)
+    w = rng.integers(-7, 8, (n_all, n_int)).astype(np.int8)
+    p = LIFIntParams(leak_shift=3, v_threshold=30, v_reset=0)
+    one = fused_step(np.asarray(s_all), np.asarray(v), np.asarray(w), p,
+                     interpret=True)              # single full-array tile
+    tiled = fused_step(np.asarray(s_all), np.asarray(v), np.asarray(w), p,
+                       block=DEFAULT_BLOCK, interpret=True)
+    for a, t in zip(one, tiled):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(t))
+
+
+# ---------------------------------------------------------------------------
+# pack_dense: exact densification + narrowest-dtype packing
+# ---------------------------------------------------------------------------
+
+def test_pack_dense_sums_duplicates_and_narrows(rec_program):
+    g = rec_program.graph
+    lw = lower_tables(g, rec_program.tables)
+    d = pack_dense(lw)
+    assert d.weight.shape == (g.n_neurons, g.n_internal)
+    w_ref = np.zeros((g.n_neurons, g.n_internal), np.int64)
+    np.add.at(w_ref, (lw.op_pre, lw.op_post_local), lw.op_weight)
+    np.testing.assert_array_equal(d.weight.astype(np.int64), w_ref)
+    # narrowest signed dtype holding every SUMMED entry
+    lo, hi = int(w_ref.min()), int(w_ref.max())
+    want = next(dt for dt in (np.int8, np.int16, np.int32)
+                if np.iinfo(dt).min <= lo and hi <= np.iinfo(dt).max)
+    assert d.dtype == np.dtype(want)
+
+
+def test_pack_dense_size_guard(monkeypatch, rec_program):
+    from repro.kernels import fused_step as fs
+    monkeypatch.setattr(fs, "MAX_DENSE_BYTES", 16)
+    lw = lower_tables(rec_program.graph, rec_program.tables)
+    with pytest.raises(ValueError, match="kernel='lif'"):
+        fs.pack_dense(lw)
+
+
+def test_fused_step_packet_counts_count_all_senders():
+    """Packets = every nonzero spike-plane entry (external ‖ internal)."""
+    p = LIFIntParams(leak_shift=3, v_threshold=100, v_reset=0)
+    s_all = np.array([[1, 0, 1, 0, 1], [0, 0, 0, 0, 0]], np.int32)
+    v = np.zeros((2, 2), np.int32)
+    w = np.zeros((5, 2), np.int8)
+    _, _, pkt = fused_step(np.asarray(s_all), np.asarray(v),
+                           np.asarray(w), p, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pkt), [3, 0])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: random quantized nets stay bit-exact across tiers
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           n_inputs=st.integers(4, 24),
+           n_internal=st.integers(4, 24),
+           rate=st.floats(0.05, 0.9))
+    def test_fused_bit_exact_random_quantized_nets(seed, n_inputs,
+                                                   n_internal, rate):
+        rng = np.random.default_rng(seed)
+        n_syn = int(rng.integers(n_internal, 4 * (n_inputs + n_internal)))
+        g = random_graph(n_inputs, n_internal, n_syn, seed=seed)
+        tables = compile(g, make_hw(g), max_iters=2500).tables
+        ext = make_ext(g, b=int(rng.integers(1, 5)),
+                       t=int(rng.integers(2, 9)), rate=rate, seed=seed)
+        s_f, v_f, st_f = JaxMappedEngine(
+            g, tables, ExecutionSpec(kernel="fused")).run(ext)
+        s_u, v_u, st_u = JaxMappedEngine(
+            g, tables, ExecutionSpec(kernel="reference")).run(ext)
+        assert s_f.tobytes() == s_u.tobytes()
+        assert v_f.tobytes() == v_u.tobytes()
+        assert st_f["packet_counts"].tobytes() == \
+            st_u["packet_counts"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Golden artifact through the fused tier
+# ---------------------------------------------------------------------------
+
+def test_golden_artifact_fused_tier_bit_exact():
+    program = Program.load(GOLDEN / "tiny_program_v1.npz")
+    with np.load(GOLDEN / "tiny_program_v1_io.npz") as io:
+        s, v, stats = program.run(io["ext"], ExecutionSpec(kernel="fused"))
+        np.testing.assert_array_equal(s, io["spikes"])
+        np.testing.assert_array_equal(v, io["v_final"])
+        np.testing.assert_array_equal(stats["packet_counts"],
+                                      io["packet_counts"])

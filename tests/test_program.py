@@ -11,8 +11,8 @@ import numpy as np
 import pytest
 
 from conftest import make_ext, make_feedforward, make_hw
-from repro.core import (ENGINES, CycleModel, Program, compile, compile_snn,
-                        random_graph, run_mapped, run_oracle)
+from repro.core import (ENGINES, CycleModel, ExecutionSpec, Program, compile,
+                        compile_snn, random_graph, run_mapped, run_oracle)
 from repro.kernels.ops import _default_interpret
 
 _hw, _feedforward, _ext = make_hw, make_feedforward, make_ext
@@ -71,11 +71,11 @@ def test_compile_rejects_unknown_engine_and_method():
 def test_run_uniform_shapes_and_bits(recurrent_program, engine):
     p = recurrent_program
     ext_b = _ext(p.graph, b=3, t=7, seed=1)
-    s, v, st = p.run(ext_b, engine=engine)
+    s, v, st = p.run(ext_b, engine)
     assert s.shape == (3, 7, p.graph.n_internal)
     assert v.shape == (3, p.graph.n_internal)
     assert st["packet_counts"].shape == (3, 7)
-    s1, v1, st1 = p.run(ext_b[0], engine=engine)    # unbatched
+    s1, v1, st1 = p.run(ext_b[0], engine)           # unbatched
     assert s1.shape == (7, p.graph.n_internal)
     assert st1["packet_counts"].shape == (7,)
     np.testing.assert_array_equal(s1, s[0])
@@ -93,7 +93,7 @@ def test_run_uniform_shapes_and_bits(recurrent_program, engine):
 def test_run_rejects_bad_engine_and_shape(recurrent_program):
     p = recurrent_program
     with pytest.raises(ValueError, match="engine"):
-        p.run(_ext(p.graph, 1, 4), engine="fpga")
+        p.run(_ext(p.graph, 1, 4), "fpga")
     with pytest.raises(ValueError, match="shape"):
         p.run(np.zeros((4, p.graph.n_inputs + 1), np.int32))
 
@@ -137,7 +137,7 @@ def test_save_load_bit_exact_no_repartition(tmp_path, monkeypatch, kind):
     assert p2.hw == p.hw
 
     ext = _ext(g, b=3, t=9, seed=2)
-    s, v, st = p2.run(ext, engine="jax")
+    s, v, st = p2.run(ext, "jax")
     for b in range(3):
         s_ref, v_ref = run_oracle(g, ext[b])
         np.testing.assert_array_equal(s[b], s_ref)
@@ -186,7 +186,7 @@ def test_init_packets_deterministic_across_save_load(tmp_path,
 def test_profile_matches_cycle_model(recurrent_program):
     p = recurrent_program
     ext = _ext(p.graph, b=2, t=8, seed=3)
-    _, _, st = p.run(ext, engine="python")
+    _, _, st = p.run(ext, "python")
     prof = p.profile(st)
     assert len(prof.per_sample) == 2
     cm = CycleModel(p.hw)
@@ -198,7 +198,7 @@ def test_profile_matches_cycle_model(recurrent_program):
         np.mean([r.latency_us for r in prof.per_sample]))
     assert prof.resources == p.report.resources
     # unbatched stats -> aggregate IS the single sample
-    _, _, st1 = p.run(ext[0], engine="python")
+    _, _, st1 = p.run(ext[0], "python")
     prof1 = p.profile(st1)
     assert prof1.cycle == prof1.per_sample[0]
     # n_synapses override changes only the per-synapse denominator
@@ -211,12 +211,19 @@ def test_profile_matches_cycle_model(recurrent_program):
 # Owned engines.
 # ---------------------------------------------------------------------------
 
-def test_engines_are_owned_and_keyed_on_resolved_options(recurrent_program):
+def test_engines_are_owned_and_keyed_on_resolved_spec(recurrent_program):
     p = recurrent_program
     assert p.engine() is p.engine()
-    # interpret=None resolves to the platform default before keying
-    assert p.engine() is p.engine(interpret=_default_interpret())
-    assert p.engine(nu_kernel=False) is not p.engine()
+    # unset fields resolve to platform defaults before keying, so every
+    # spelling of the default spec maps to the same engine instance
+    assert p.engine() is p.engine(ExecutionSpec())
+    assert p.engine() is p.engine(
+        ExecutionSpec(kernel="fused", interpret=_default_interpret()))
+    assert p.engine(ExecutionSpec(kernel="reference")) is not p.engine()
+    # legacy kwargs still reach the same cache, through a warning shim
+    with pytest.deprecated_call():
+        legacy = p.engine(nu_kernel=True)
+    assert legacy is p.engine(ExecutionSpec(kernel="lif"))
     # no module-level cache left behind
     from repro.core import engine_jax
     assert not hasattr(engine_jax, "_ENGINE_CACHE")

@@ -188,7 +188,7 @@ def test_custom_strategy_reaches_compile_and_stays_correct():
         assert p.tables.send_order == sorted(p.tables.send_order,
                                              reverse=True)
         ext = make_ext(g, 1, 8, seed=1)[0]
-        s, v, _ = p.run(ext, engine="python")
+        s, v, _ = p.run(ext, "python")
         s_ref, v_ref = run_oracle(g, ext)
         np.testing.assert_array_equal(s, s_ref)
         np.testing.assert_array_equal(v, v_ref)
@@ -207,7 +207,7 @@ def test_compile_reaches_every_schedule_strategy(method):
     validate_schedule(g, p.tables)
     # every strategy executes bit-exactly (order changes slots, not math)
     ext = make_ext(g, 1, 6, seed=2)[0]
-    s, _, _ = p.run(ext, engine="python")
+    s, _, _ = p.run(ext, "python")
     np.testing.assert_array_equal(s, run_oracle(g, ext)[0])
 
 

@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from conftest import make_ext, make_feedforward, make_hw
-from repro.core import Program, compile, random_graph
+from repro.core import ExecutionSpec, Program, compile, random_graph
 from repro.launch.mesh import make_serving_mesh
 from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
                          Request, Server, ShardedRunner,
@@ -291,22 +291,25 @@ def test_batcher_measured_mode_warms_buckets(ff_program):
 def test_sharded_bit_exact_ragged_batches(kind, ff_program, rec_program):
     program = ff_program if kind == "feedforward" else rec_program
     g = program.graph
-    for b in ragged_sizes():
+    forced = ShardedRunner(program, min_shard=0)       # no fallback: every
+    for b in ragged_sizes():                           # size pads-and-masks
         ext = make_ext(g, b, 12, seed=b)
         s1, v1, st1 = program.run(ext)                 # single-device jax
-        s2, v2, st2 = program.run(ext, sharded=True)   # shard_map mesh
-        assert s2.tobytes() == s1.tobytes(), f"spikes differ at B={b}"
-        assert v2.tobytes() == v1.tobytes(), f"v_final differs at B={b}"
-        assert st2["packet_counts"].tobytes() == \
-            st1["packet_counts"].tobytes(), f"packets differ at B={b}"
-        assert st2["mean_packets_per_step"] == st1["mean_packets_per_step"]
+        for s2, v2, st2 in (program.run(ext, ExecutionSpec(mesh="auto")),
+                            forced.run(ext)):
+            assert s2.tobytes() == s1.tobytes(), f"spikes differ at B={b}"
+            assert v2.tobytes() == v1.tobytes(), f"v_final differs at B={b}"
+            assert st2["packet_counts"].tobytes() == \
+                st1["packet_counts"].tobytes(), f"packets differ at B={b}"
+            assert st2["mean_packets_per_step"] == \
+                st1["mean_packets_per_step"]
 
 
 def test_sharded_unbatched_input_squeezes(rec_program):
     g = rec_program.graph
     ext = make_ext(g, 1, 9, seed=1)[0]                 # [T, n_in]
     s1, v1, st1 = rec_program.run(ext)
-    s2, v2, st2 = rec_program.run(ext, sharded=True)
+    s2, v2, st2 = rec_program.run(ext, ExecutionSpec(mesh="auto"))
     assert s2.shape == s1.shape and v2.shape == v1.shape
     assert s2.tobytes() == s1.tobytes()
     np.testing.assert_array_equal(st2["packet_counts"],
@@ -325,7 +328,11 @@ def test_sharded_runner_owned_and_cached(rec_program):
 
 
 def test_sharded_rejects_bad_requests(rec_program):
-    with pytest.raises(ValueError, match="sharded=True runs the jax"):
+    with pytest.raises(ValueError, match="mesh= shards the jax"):
+        ExecutionSpec(engine="python", mesh="auto")
+    # the deprecated kwargs shim keeps its exact historical error
+    with pytest.deprecated_call(), \
+            pytest.raises(ValueError, match="sharded=True runs the jax"):
         rec_program.run(make_ext(rec_program.graph, 1, 4), sharded=True,
                         engine="python")
     with pytest.raises(ValueError, match="lack 'data'"):
@@ -367,8 +374,9 @@ def test_registry_engine_ownership_per_model(ff_program, rec_program):
     # engines are lazy, owned by each Program, reused across lookups
     assert reg.get("a").engine() is reg.get("a").engine()
     assert reg.get("a").engine() is not reg.get("b").engine()
-    assert reg.runner("a", sharded=True).__self__ is \
-        reg.runner("a", sharded=True).__self__         # one ShardedRunner
+    sharded_spec = ExecutionSpec(mesh="auto")
+    assert reg.runner("a", sharded_spec).__self__ is \
+        reg.runner("a", sharded_spec).__self__         # one ShardedRunner
     ext = make_ext(ff_program.graph, 2, 6, seed=0)
     s1, _, _ = reg.runner("a")(ext)
     s2, _, _ = ff_program.run(ext)
@@ -449,7 +457,7 @@ def test_golden_artifact_loads_and_runs_bit_exact():
     assert program.feasible
     with np.load(GOLDEN / "tiny_program_v1_io.npz") as io:
         for engine in ("python", "jax", "oracle"):
-            s, v, stats = program.run(io["ext"], engine=engine)
+            s, v, stats = program.run(io["ext"], engine)
             np.testing.assert_array_equal(s, io["spikes"], err_msg=engine)
             np.testing.assert_array_equal(v, io["v_final"], err_msg=engine)
             np.testing.assert_array_equal(stats["packet_counts"],

@@ -1,0 +1,167 @@
+"""Compiler-scale benchmark: hypergraph mapping quality + multilevel
+compile cost (DESIGN.md §11).
+
+Two claim groups:
+
+* ``mapping.*`` — the ``hypergraph`` strategy vs the paper's framework
+  heuristic on the fig13 SHD shape (the ROADMAP acceptance bar): OT
+  depth under the best registered schedule strategy, and the static
+  multicast packet cost of the mapping (total destination-SPU count
+  over all fan-out hyperedges — the MC-tree deliveries one spike of
+  every source costs). ``mapping.hypergraph.beats_paper`` is 1.0 when
+  the hypergraph mapping wins on OT depth OR packets.
+
+* ``compiler_scale.*`` — wall-clock compile seconds and peak RSS of a
+  ``method="multilevel"`` + ``compile(n_chips=4)`` compile at a PINNED
+  10⁵-synapse synthetic shape (``repro.core.scale``), measured in a
+  fresh subprocess so ``ru_maxrss`` reflects this compile alone, not
+  whatever benchmark ran before in the smoke process. Full (non-quick)
+  mode sweeps additional sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+_ROWS_TAG = "COMPILER_SCALE_ROWS_JSON:"
+PINNED = dict(n_synapses=100_000, topology="mixed", skew=1.0, seed=0,
+              n_chips=4, spus_per_chip=16)
+FULL_SWEEP = (100_000, 300_000)
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale mapping quality (in-process; no RSS involved).
+# ---------------------------------------------------------------------------
+
+def _best_depth(g, hw, assign) -> int:
+    from repro.core.scheduling import (SCHEDULE_STRATEGIES, group_info,
+                                       schedule)
+    info = group_info(g, assign)
+    return min(int(schedule(g, assign, hw, method=name, info=info).depth)
+               for name in SCHEDULE_STRATEGIES)
+
+
+def _quality_rows(quick: bool) -> list[tuple]:
+    from benchmarks.partitioner_throughput import fig13_shd_instance
+    from repro.core.mapping.hypergraph import (hypergraph_partition,
+                                               mapping_traffic)
+    from repro.core.mapping.search import framework_partition
+
+    g, hw = fig13_shd_instance()
+    iters = 3000 if quick else 20000
+    t0 = time.perf_counter()
+    fw, _, _ = framework_partition(g, hw, seed=0, restarts=1,
+                                   max_iters=iters)
+    fw_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hg = hypergraph_partition(g, hw)
+    hg_s = time.perf_counter() - t0
+
+    fw_ot = _best_depth(g, hw, fw.assign)
+    hg_ot = _best_depth(g, hw, hg.assign)
+    fw_pk = mapping_traffic(g, fw.assign, hw)["dests_total"]
+    hg_pk = mapping_traffic(g, hg.assign, hw)["dests_total"]
+    beats = float(hg_ot < fw_ot or hg_pk < fw_pk)
+    return [
+        ("mapping.instance.synapses", g.n_synapses, "fig13 SHD shape"),
+        ("mapping.framework.ot_depth", fw_ot,
+         f"best schedule strategy, {iters} iters"),
+        ("mapping.framework.packets", fw_pk,
+         "multicast destination-SPU total"),
+        ("mapping.framework.seconds", fw_s, ""),
+        ("mapping.hypergraph.ot_depth", hg_ot, "best schedule strategy"),
+        ("mapping.hypergraph.packets", hg_pk,
+         "multicast destination-SPU total"),
+        ("mapping.hypergraph.seconds", hg_s, ""),
+        ("mapping.hypergraph.beats_paper", beats,
+         "acceptance: wins OT depth OR packets vs framework"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Scale compile (child measures; parent re-execs for a clean ru_maxrss).
+# ---------------------------------------------------------------------------
+
+def _measure_scale(n_synapses: int, topology: str, skew: float, seed: int,
+                   n_chips: int, spus_per_chip: int) -> list[tuple]:
+    import dataclasses
+    import resource
+
+    from repro.core import compile as compile_program
+    from repro.core.mapping.hypergraph import mapping_traffic
+    from repro.core.scale import scale_hw, synthetic_graph
+
+    g = synthetic_graph(n_synapses, topology=topology, skew=skew, seed=seed)
+    hw_all = scale_hw(g, n_chips=n_chips, spus_per_chip=spus_per_chip)
+    # per-chip description; compile(n_chips=) replicates it (the API the
+    # subsystem ships — exercise it rather than a pre-flattened config)
+    hw1 = dataclasses.replace(hw_all, n_spus=hw_all.spus_per_chip, n_chips=1)
+    t0 = time.perf_counter()
+    prog = compile_program(g, hw1, method="multilevel", n_chips=n_chips,
+                           validate=True)
+    compile_s = time.perf_counter() - t0
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    traffic = mapping_traffic(g, prog.tables.assign, prog.hw)
+    tag = f"compiler_scale.{n_synapses // 1000}k"
+    return [
+        (f"{tag}.synapses", g.n_synapses, f"{topology}, skew={skew}"),
+        (f"{tag}.compile_s", compile_s,
+         f"multilevel, n_chips={n_chips}, validated schedule"),
+        (f"{tag}.peak_rss_mb", peak_mb, "subprocess ru_maxrss"),
+        (f"{tag}.feasible", float(prog.feasible), "Eq. (9) on every SPU"),
+        (f"{tag}.ot_depth", int(prog.ot_depth), ""),
+        (f"{tag}.packets", traffic["dests_total"],
+         "multicast destination-SPU total"),
+        (f"{tag}.inter_chip_total", traffic["inter_chip_total"],
+         "forwarded packets if every source fired once"),
+    ]
+
+
+def _scale_rows_subprocess(n_synapses: int) -> list[tuple]:
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [str(root / "src"), env.get("PYTHONPATH")] if p)
+    cmd = [sys.executable, "-m", "benchmarks.compiler_scale", "--emit-json",
+           "--synapses", str(n_synapses)]
+    proc = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
+                          text=True, timeout=1800)
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_ROWS_TAG):
+            payload = json.loads(line[len(_ROWS_TAG):])
+    if proc.returncode != 0 or payload is None:
+        raise RuntimeError(
+            f"compiler_scale subprocess failed (rc={proc.returncode}):\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    return [tuple(row) for row in payload]
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = _quality_rows(quick)
+    # the pinned 1e5 shape always runs (the tracked trajectory point);
+    # full mode sweeps the larger sizes on top
+    for n in (PINNED["n_synapses"],) if quick else FULL_SWEEP:
+        rows += _scale_rows_subprocess(n)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-json", action="store_true")
+    ap.add_argument("--synapses", type=int,
+                    default=PINNED["n_synapses"])
+    args = ap.parse_args()
+    out = _measure_scale(args.synapses, PINNED["topology"], PINNED["skew"],
+                         PINNED["seed"], PINNED["n_chips"],
+                         PINNED["spus_per_chip"])
+    if args.emit_json:
+        print(_ROWS_TAG + json.dumps(out))
+    else:
+        for name, value, derived in out:
+            print(f"{name},{value},{derived}")

@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.partitioner_throughput",  # mapping-subsystem speedup
     "benchmarks.scheduler_throughput",    # scheduling-subsystem speedup
     "benchmarks.serving_throughput",      # serving-subsystem smoke
+    "benchmarks.compiler_scale",          # mapping-at-scale subsystem
     "benchmarks.roofline_table",          # §Roofline aggregation
 ]
 
@@ -36,7 +37,8 @@ MODULES = [
 SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
                  "benchmarks.partitioner_throughput",
                  "benchmarks.scheduler_throughput",
-                 "benchmarks.serving_throughput"]
+                 "benchmarks.serving_throughput",
+                 "benchmarks.compiler_scale"]
 
 
 def main() -> None:

@@ -228,16 +228,18 @@ class CycleModel:
         self.hw = hw
         self.power = power or PowerModel()
 
-    def timestep_cycles(self, n_packets: int, ot_depth: int
-                        ) -> tuple[int, int, int]:
+    def timestep_cycles(self, n_packets: int, ot_depth: int,
+                        n_inter_chip: int = 0) -> tuple[int, int, int]:
         d = self.hw.tree_depth
-        dist = n_packets + 1 + d
+        dist = n_packets + 1 + d \
+            + n_inter_chip * self.hw.inter_chip_hop_cycles
         syn = 2 * ot_depth
         drain = d + self.NU_PIPELINE + 1
         return dist, syn, drain
 
     def run(self, packet_counts: np.ndarray, ot_depth: int,
-            n_synapses_total: int) -> CycleReport:
+            n_synapses_total: int,
+            inter_chip_counts: np.ndarray | None = None) -> CycleReport:
         """Aggregate one sample's per-timestep packet counts.
 
         ``packet_counts`` must be 1-D ``[T]``; the per-timestep phase
@@ -246,6 +248,13 @@ class CycleModel:
         are rejected — aggregate per sample (what
         :meth:`repro.core.program.Program.profile` does) rather than
         silently iterating rows.
+
+        ``inter_chip_counts`` takes the per-timestep forwarded-packet
+        counts of a multi-chip mapping (DESIGN.md §11; see
+        :func:`repro.core.mapping.hypergraph.inter_chip_packet_counts`),
+        each charged ``hw.inter_chip_hop_cycles`` distribution cycles.
+        Omitted (or all-zero, the ``n_chips=1`` case) the report is
+        bit-identical to the single-chip model.
         """
         pkts = np.asarray(packet_counts)
         if pkts.ndim != 1:
@@ -253,9 +262,17 @@ class CycleModel:
                 f"packet_counts must be 1-D [T]; got shape {pkts.shape} — "
                 f"profile batched runs per sample (Program.profile "
                 f"aggregates them)")
+        inter = 0
+        if inter_chip_counts is not None:
+            ic = np.asarray(inter_chip_counts)
+            if ic.shape != pkts.shape:
+                raise ValueError(
+                    f"inter_chip_counts shape {ic.shape} != packet_counts "
+                    f"shape {pkts.shape}")
+            inter = int(ic.sum()) * self.hw.inter_chip_hop_cycles
         t_steps = len(pkts)
         d = self.hw.tree_depth
-        dist = int(pkts.sum()) + t_steps * (1 + d)
+        dist = int(pkts.sum()) + t_steps * (1 + d) + inter
         syn = t_steps * 2 * ot_depth
         over = t_steps * (d + self.NU_PIPELINE + 1)
         total = dist + syn + over

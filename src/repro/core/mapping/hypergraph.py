@@ -1,0 +1,374 @@
+"""Hyperedge model of the SNN fan-out + overlap-driven mapping (§11).
+
+SupraSNN's Multi-Cast Tree delivers one spike packet to EVERY SPU that
+holds a synapse of the firing neuron — a neuron's fan-out is therefore
+a *hyperedge* (one source, many sinks), and the spike traffic of a
+mapping is the classic hypergraph connectivity metric: the number of
+destination SPUs each hyperedge spans (λ). Standard graph partitioning
+cannot see this multicast reuse; hyperedge-overlap partitioning
+(Ronzani & Silvano 2026) reports 20–30% less inter-core traffic by
+maximizing co-destination overlap. This module provides:
+
+* :class:`HyperView` — CSR adjacency of the fan-out hyperedges over an
+  :class:`~repro.core.graph.SNNGraph` (post -> fan-in synapses,
+  pre -> fan-out posts);
+* :func:`hypergraph_partition` — a deterministic greedy partitioner
+  that places whole fan-in groups by descending size, choosing the SPU
+  maximizing the second-order affinity term (shared fan-in pres ->
+  reused multicast deliveries, then shared weight values -> reused UM
+  lines) among the Eq. (9)-feasible SPUs;
+* :func:`refine_mapping` — FM-style boundary refinement moving whole
+  (SPU, post) fan-in groups under the extended objective
+  ``J = (overflow, traffic)``: Eq. (10) overflow lines first, then
+  multicast deliveries + inter-chip forwards (DESIGN.md §11). Moves
+  are only accepted on strict lexicographic improvement, so the
+  refined mapping NEVER scores worse than its input — the multilevel
+  mapper's uncoarsening contract;
+* traffic accounting — :func:`multicast_dests`, :func:`chip_span`,
+  :func:`mapping_traffic`, :func:`inter_chip_packet_counts` — the
+  static mapping metrics behind the ``mapping.*`` benchmark rows and
+  the multi-chip cycle-model term.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import SNNGraph
+from repro.core.mapping.books import Books, PartitionResult
+from repro.core.memory_model import HardwareConfig, scores_from_assignment
+
+
+# ---------------------------------------------------------------------------
+# The hyperedge view.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HyperView:
+    """CSR adjacency of a graph's fan-out hyperedge structure.
+
+    ``posts`` are the graph's distinct post-neurons; post ``posts[j]``
+    owns fan-in synapses ``fanin_syn[fanin_ptr[j]:fanin_ptr[j + 1]]``
+    (sorted by synapse id). ``fanout_ptr``/``fanout_post`` give each
+    PRE neuron's hyperedge: the posts it reaches (indexed by global
+    pre id, empty rows for neurons with no fan-out).
+    """
+    posts: np.ndarray           # [P] distinct post ids, ascending
+    fanin_ptr: np.ndarray       # [P+1] CSR offsets into fanin_syn
+    fanin_syn: np.ndarray       # [E] synapse ids grouped by post
+    fanout_ptr: np.ndarray      # [n_neurons+1] CSR offsets per pre
+    fanout_post: np.ndarray     # [E] post ids grouped by pre
+
+    @property
+    def n_posts(self) -> int:
+        return int(len(self.posts))
+
+    def fanin(self, j: int) -> np.ndarray:
+        """Synapse ids of post ``posts[j]``."""
+        return self.fanin_syn[self.fanin_ptr[j]:self.fanin_ptr[j + 1]]
+
+
+def hyper_view(g: SNNGraph) -> HyperView:
+    """Build the CSR hyperedge view (two argsorts, no Python loops)."""
+    e = g.n_synapses
+    order = np.argsort(g.post.astype(np.int64) * e + np.arange(e))
+    posts = np.unique(g.post).astype(np.int64)
+    fanin_ptr = np.searchsorted(g.post[order], np.r_[posts, g.n_neurons])
+    fanin_ptr = np.r_[fanin_ptr[:-1], e].astype(np.int64)
+    by_pre = np.argsort(g.pre.astype(np.int64) * np.int64(g.n_neurons)
+                        + g.post)
+    fanout_ptr = np.searchsorted(
+        g.pre[by_pre], np.arange(g.n_neurons + 1)).astype(np.int64)
+    return HyperView(posts, fanin_ptr, order.astype(np.int64),
+                     fanout_ptr, g.post[by_pre].astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (the hyperedge connectivity metric + chips).
+# ---------------------------------------------------------------------------
+
+def multicast_dests(g: SNNGraph, assign: np.ndarray, n_spus: int
+                    ) -> np.ndarray:
+    """[n_neurons] destination-SPU count of each neuron's hyperedge.
+
+    Entry q is the number of SPUs holding at least one synapse with
+    pre q — the MC-tree deliveries one spike of q costs (λ of the
+    hyperedge). Zero for neurons without fan-out.
+    """
+    pairs = np.unique(g.pre.astype(np.int64) * n_spus
+                      + assign.astype(np.int64))
+    return np.bincount(pairs // n_spus, minlength=g.n_neurons)
+
+
+def chip_span(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig
+              ) -> np.ndarray:
+    """[n_neurons] distinct chips each neuron's fan-out spans."""
+    chips = hw.chip_of(assign.astype(np.int64))
+    pairs = np.unique(g.pre.astype(np.int64) * hw.n_chips + chips)
+    return np.bincount(pairs // hw.n_chips, minlength=g.n_neurons)
+
+
+def mapping_traffic(g: SNNGraph, assign: np.ndarray, hw: HardwareConfig
+                    ) -> dict:
+    """Static spike-traffic metrics of a mapping (per source spike).
+
+    ``dests_total`` is the summed hyperedge connectivity λ (fabric
+    deliveries if every source fired once); ``inter_chip_total`` the
+    summed (chips spanned - 1) forwards. ``dests_total`` is invariant
+    under the chip grouping and ``inter_chip_total == 0`` at
+    ``n_chips=1`` — the conservation the multi-chip model must keep.
+    """
+    dests = multicast_dests(g, assign, hw.n_spus)
+    span = chip_span(g, assign, hw)
+    sources = dests > 0
+    return {
+        "dests_total": int(dests.sum()),
+        "dests_mean": float(dests[sources].mean()) if sources.any() else 0.0,
+        "inter_chip_total": int(np.maximum(span - 1, 0).sum()),
+        "n_sources": int(sources.sum()),
+    }
+
+
+def inter_chip_packet_counts(ext_spikes: np.ndarray, spikes: np.ndarray,
+                             span: np.ndarray) -> np.ndarray:
+    """Per-timestep inter-chip forwarded packets of a run.
+
+    Mirrors :func:`repro.core.engine.oracle_packet_counts`: the
+    distribution phase of timestep t carries the external inputs of t
+    plus the internal spikes of t-1; each firing neuron q adds
+    ``max(span[q] - 1, 0)`` forwards. ``span`` is the
+    :func:`chip_span` vector (length ``n_neurons``; the internal block
+    is its tail). Accepts ``[T, n]`` or batched ``[B, T, n]`` spike
+    arrays, returning ``[T]`` / ``[B, T]`` counts.
+    """
+    ext = np.asarray(ext_spikes)
+    s = np.asarray(spikes)
+    if ext.ndim not in (2, 3) or s.ndim != ext.ndim:
+        raise ValueError(f"expected matching [T, n] or [B, T, n] arrays; "
+                         f"got {ext.shape} and {s.shape}")
+    hops = np.maximum(np.asarray(span, np.int64) - 1, 0)
+    n_in = ext.shape[-1]
+    ext_hops = hops[:n_in]
+    int_hops = hops[len(hops) - s.shape[-1]:]
+    counts = (ext != 0).astype(np.int64) @ ext_hops
+    counts[..., 1:] += (s[..., :-1, :] != 0).astype(np.int64) @ int_hops
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Greedy hyperedge-overlap partitioning.
+# ---------------------------------------------------------------------------
+
+def hypergraph_partition(g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
+                         refine: bool = True, refine_passes: int = 2
+                         ) -> PartitionResult:
+    """Deterministic greedy overlap partitioner (Ronzani & Silvano style).
+
+    Whole fan-in groups are placed in descending size order (heaviest
+    posts first — they fix the layout the small ones then overlap
+    onto). For each post the destination is chosen among the SPUs that
+    stay Eq. (9)-feasible by the lexicographic affinity key
+
+        (max shared fan-in pres, min new UM weight lines,
+         max remaining Eq. (10) score, min SPU id)
+
+    — multicast reuse first (every shared pre is one MC delivery the
+    SPU already receives), weight reuse second, load balance third.
+    If no SPU stays feasible the least-overflowing one is taken and
+    the result may be infeasible (exactly like the baselines). A
+    final :func:`refine_mapping` pass (on by default) cleans up the
+    greedy tail. ``seed`` is accepted for the
+    :class:`~repro.core.mapping.strategies.MappingStrategy` protocol;
+    the algorithm is deterministic and ignores it.
+    """
+    hv = hyper_view(g)
+    m, k, cap = hw.n_spus, hw.concentration, hw.unified_mem_depth
+    w_vals, w_id = np.unique(g.weight, return_inverse=True)
+    nw = len(w_vals)
+
+    pre_present = np.zeros((m, g.n_neurons), bool)
+    w_present = np.zeros((m, nw), bool)
+    n_posts = np.zeros(m, np.int64)
+    n_weights = np.zeros(m, np.int64)
+    assign = np.zeros(g.n_synapses, np.int32)
+
+    sizes = np.diff(hv.fanin_ptr)
+    order = np.lexsort((hv.posts, -sizes))      # big fan-ins first
+    spu_idx = np.arange(m)
+    for j in order:
+        syns = hv.fanin(j)
+        pres = g.pre[syns].astype(np.int64)     # unique: one syn per (pre, q)
+        uw = np.unique(w_id[syns])
+        overlap = pre_present[:, pres].sum(1)                    # [M]
+        new_w = (~w_present[:, uw]).sum(1)                       # [M]
+        lines_now = -(-(n_weights + 1) // k) + n_posts
+        lines_after = -(-(n_weights + new_w + 1) // k) + n_posts + 1
+        feasible = lines_after <= cap
+        if feasible.any():
+            # lexicographic affinity key over the feasible SPUs
+            f = spu_idx[feasible]
+            pick = f[np.lexsort((f, lines_after[f],
+                                 lines_after[f] - lines_now[f],
+                                 -overlap[f]))[0]]
+        else:
+            pick = int(np.lexsort((spu_idx, lines_after))[0])
+        assign[syns] = pick
+        pre_present[pick, pres] = True
+        w_present[pick, uw] = True
+        n_posts[pick] += 1
+        n_weights[pick] = w_present[pick].sum()
+
+    iterations = hv.n_posts
+    if refine:
+        assign, stats = refine_mapping(g, hw, assign, passes=refine_passes)
+        iterations += stats.moves
+    scores = scores_from_assignment(g.weight, g.post, assign, hw)
+    return PartitionResult(assign.astype(np.int32), scores,
+                           bool(scores.min() >= 0), iterations, 0, [])
+
+
+# ---------------------------------------------------------------------------
+# FM-style boundary refinement under the extended objective.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RefineStats:
+    """What one :func:`refine_mapping` call did (and proves)."""
+    passes: int
+    moves: int
+    overflow_before: int
+    overflow_after: int
+    traffic_before: int
+    traffic_after: int
+
+
+def _overflow(scores: np.ndarray) -> int:
+    """Total Eq. (10) violation lines (0 iff the mapping is feasible)."""
+    return int(np.maximum(-scores, 0).sum())
+
+
+def refine_mapping(g: SNNGraph, hw: HardwareConfig, assign: np.ndarray, *,
+                   passes: int = 3
+                   ) -> tuple[np.ndarray, RefineStats]:
+    """FM-style whole-group boundary refinement of a mapping.
+
+    Moves (SPU, post) fan-in groups between SPUs, accepting a move only
+    on STRICT lexicographic improvement of
+
+        J = (overflow, traffic)
+        overflow = Σ_i max(0, -score_i)              -- Eq. (10) repair
+        traffic  = Σ_q λ(q) + hop · Σ_q (chips(q)-1) -- multicast reuse
+
+    where λ(q) is the destination-SPU count of neuron q's hyperedge and
+    ``hop = hw.inter_chip_hop_cycles`` prices inter-chip forwards
+    (DESIGN.md §11's second-order affinity term next to Eq. (10)).
+    Because acceptance is strict, the returned mapping NEVER scores
+    worse than the input on (overflow, traffic) — the property
+    tests/test_multilevel.py pins. Groups are visited worst-SPU-first;
+    the pass loop stops early when a full sweep accepts nothing.
+    """
+    m, k, cap = hw.n_spus, hw.concentration, hw.unified_mem_depth
+    c_chips = hw.n_chips
+    hop = hw.inter_chip_hop_cycles if c_chips > 1 else 0
+    assign = assign.astype(np.int32).copy()
+    books = Books(g, hw, assign[None])
+    w_id = books.w_id
+    pre = g.pre.astype(np.int64)
+    post = g.post.astype(np.int64)
+
+    cnt_pre = np.zeros((m, g.n_neurons), np.int32)
+    np.add.at(cnt_pre, (assign, pre), 1)
+    cnt_chip = cnt_pre.reshape(c_chips, hw.spus_per_chip,
+                               g.n_neurons).sum(1)
+    dests = int((cnt_pre > 0).sum())
+    inter = int(np.maximum((cnt_chip > 0).sum(0)
+                           - (cnt_pre.sum(0) > 0), 0).sum())
+
+    scores = books.scores_r(0)
+    overflow = _overflow(scores)
+    traffic = dests + hop * inter
+    stats = RefineStats(0, 0, overflow, overflow, traffic, traffic)
+    spus = np.arange(m)
+
+    def lines_of(nw_, np_):
+        return -(-(nw_ + 1) // k) + np_
+
+    for _ in range(passes):
+        stats.passes += 1
+        accepted = False
+        # (spu, post) groups, worst-scored SPUs first, then post id
+        key = assign.astype(np.int64) * g.n_neurons + post
+        uniq, inv = np.unique(key, return_inverse=True)
+        g_spu = (uniq // g.n_neurons).astype(np.int64)
+        g_post = uniq % g.n_neurons
+        visit = np.lexsort((g_post, scores[g_spu]))
+        syn_order = np.argsort(inv, kind="stable")
+        starts = np.r_[0, np.cumsum(np.bincount(inv))]
+        for gi in visit:
+            i = int(g_spu[gi])
+            q = int(g_post[gi])
+            syns = syn_order[starts[gi]:starts[gi + 1]]
+            # groups move whole, so a changed first-synapse owner means
+            # the group left i; a changed count means another (i', q)
+            # group merged INTO i — either way this snapshot is stale and
+            # its deltas would be wrong, so revisit next pass instead
+            if int(assign[syns[0]]) != i \
+                    or int(books.cnt_post[0, i, q]) != len(syns):
+                continue
+            pres = pre[syns]
+            uw, uw_cnt = np.unique(w_id[syns], return_counts=True)
+
+            # Δtraffic: pres leaving i entirely vs pres new on each dest
+            leave = int((cnt_pre[i, pres] == 1).sum())
+            add_d = (cnt_pre[:, pres] == 0).sum(1)               # [M]
+            d_dests = add_d - leave
+            if hop:
+                ci = i // hw.spus_per_chip
+                leave_c = int((cnt_chip[ci, pres] == 1).sum())
+                add_c = (cnt_chip[:, pres] == 0).sum(1)          # [C]
+                cd = spus // hw.spus_per_chip
+                d_inter = np.where(cd == ci, 0, add_c[cd] - leave_c)
+            else:
+                d_inter = np.zeros(m, np.int64)
+
+            # Δoverflow: i loses post q + its unique weights; d gains
+            gone_w = int((books.cnt_w[0, i, uw] == uw_cnt).sum())
+            new_w = (books.cnt_w[0, :, uw] == 0).sum(0)          # [M]
+            has_q = books.cnt_post[0, :, q] > 0                  # [M]
+            nw0, np0 = books.n_weights[0], books.n_posts[0]
+            sc_i_new = cap - lines_of(nw0[i] - gone_w, np0[i] - 1)
+            sc_d_new = cap - lines_of(nw0 + new_w, np0 + ~has_q)
+            d_over = (np.maximum(-sc_i_new, 0) - np.maximum(-scores[i], 0)
+                      + np.maximum(-sc_d_new, 0)
+                      - np.maximum(-scores, 0))
+            d_traf = d_dests + hop * d_inter
+
+            d_over[i] = d_traf[i] = 0           # staying is never a move
+            better = (d_over < 0) | ((d_over == 0) & (d_traf < 0))
+            better[i] = False
+            if not better.any():
+                continue
+            cand = spus[better]
+            d = int(cand[np.lexsort((cand, d_traf[cand],
+                                     d_over[cand]))[0]])
+
+            books.move_group(0, syns, i, d)
+            assign[syns] = d
+            cnt_pre[i, pres] -= 1
+            cnt_pre[d, pres] += 1
+            if c_chips > 1:
+                cnt_chip[i // hw.spus_per_chip, pres] -= 1
+                cnt_chip[d // hw.spus_per_chip, pres] += 1
+            dests += int(d_dests[d])
+            inter += int(d_inter[d])
+            scores = books.scores_r(0)
+            overflow += int(d_over[d])
+            stats.moves += 1
+            accepted = True
+        if not accepted:
+            break
+
+    stats.overflow_after = _overflow(books.scores_r(0))
+    stats.traffic_after = dests + hop * inter
+    return assign, stats

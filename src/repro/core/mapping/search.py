@@ -357,11 +357,14 @@ class _Population:
         for it in range(self.max_iters):
             if self.done.all():
                 return False
-            if deadline is not None and time.perf_counter() >= deadline:
-                self._abort_active(it)
-                return True
             feasible_now = False
             for rr in range(self.n):
+                # deadline INSIDE the restart sweep: one restart's step is
+                # the atomic unit, so a slow sweep over a large population
+                # cannot overshoot the budget by more than a single step
+                if deadline is not None and time.perf_counter() >= deadline:
+                    self._abort_active(it)
+                    return True
                 if not self.done[rr] and self._step(rr, it):
                     feasible_now |= self.results[rr].feasible
             if early_exit and feasible_now:
@@ -417,15 +420,39 @@ def framework_partition(g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
 # The portfolio driver.
 # ---------------------------------------------------------------------------
 
+#: above this synapse count the "auto" portfolio also races ``multilevel``
+LARGE_GRAPH_SYNAPSES = 50_000
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
-    """Knobs of the portfolio mapping search (``compile(search=...)``)."""
+    """Knobs of the portfolio mapping search (``compile(search=...)``).
+
+    ``extra_strategies`` names registered
+    :class:`~repro.core.mapping.strategies.MappingStrategy` entries
+    raced alongside the baselines and framework restarts. The default
+    ``"auto"`` races ``hypergraph`` always and adds ``multilevel``
+    above :data:`LARGE_GRAPH_SYNAPSES` synapses; pass ``()`` for the
+    pre-§11 portfolio.
+
+    ``workers > 1`` fans the mapping candidates across a process pool
+    (:mod:`concurrent.futures`). Each framework restart then runs as an
+    independent single-seed search (identical to
+    ``framework_partition(seed=seed+k, restarts=1)``), and results are
+    reduced in fixed candidate order, so the winner never depends on
+    worker timing — only the wall-clock ``budget_seconds`` can shrink
+    the candidate set (a deterministic PREFIX of it, plus the always-
+    awaited first candidate). ``early_exit`` has no cross-restart
+    effect in the parallel path.
+    """
     restarts: int = 4                    # framework population size
     seed: int = 0                        # first restart seed
     max_iters: int = 20000               # per-restart iteration budget
     include_baselines: bool = True       # race the round-robin seeds too
     early_exit: bool = True              # stop at the first feasible restart
     budget_seconds: float | None = None  # wall-clock cap on the whole search
+    workers: int = 1                     # mapping-candidate process pool
+    extra_strategies: tuple | str | None = "auto"    # see class docstring
 
 
 @dataclasses.dataclass
@@ -476,6 +503,92 @@ class SearchTrace:
                    budget_exhausted=bool(d.get("budget_exhausted", False)))
 
 
+def _resolve_extras(cfg: SearchConfig, g: SNNGraph) -> tuple:
+    if cfg.extra_strategies == "auto":
+        return (("hypergraph", "multilevel")
+                if g.n_synapses > LARGE_GRAPH_SYNAPSES else ("hypergraph",))
+    return tuple(cfg.extra_strategies or ())
+
+
+def _eval_spec(g: SNNGraph, hw: HardwareConfig, spec: tuple, seed: int,
+               max_iters: int, budget: float | None = None
+               ) -> tuple[PartitionResult, float]:
+    """Evaluate one mapping candidate (a process-pool work item).
+
+    ``spec`` is ``("framework", restart_seed)``, ``("baseline", name)``
+    or ``("strategy", name)``. Top-level so it pickles; strategies are
+    resolved from the import-time registry. Workers start via *spawn*
+    (fork after jax's thread pools exist can deadlock), so only
+    strategies registered at import of ``repro.core.mapping`` exist in
+    the children — a custom ``extra_strategies`` entry registered at
+    runtime needs ``workers=1`` and surfaces here as a ``KeyError``.
+    """
+    kind, val = spec
+    t0 = time.perf_counter()
+    if kind == "framework":
+        deadline = None if budget is None else t0 + budget
+        res, _, _ = framework_partition(g, hw, seed=val, restarts=1,
+                                        max_iters=max_iters,
+                                        deadline=deadline)
+    elif kind == "baseline":
+        from repro.core.baselines import BASELINES
+        res = BASELINES[val](g, hw)
+    else:
+        from repro.core.mapping.strategies import get_strategy
+        res = get_strategy(val).partition(g, hw, seed=seed,
+                                          max_iters=max_iters)
+    return res, time.perf_counter() - t0
+
+
+def _trace_of(spec: tuple, cfg: SearchConfig, res: PartitionResult,
+              seconds: float) -> CandidateTrace:
+    kind, val = spec
+    return CandidateTrace(
+        strategy="framework" if kind == "framework" else val,
+        seed=(val if kind == "framework"
+              else cfg.seed if kind == "strategy" else None),
+        feasible=res.feasible, min_score=int(res.scores.min()),
+        iterations=res.iterations, seconds=seconds)
+
+
+def _parallel_candidates(g, hw, cfg: SearchConfig, specs: list[tuple],
+                         deadline: float | None
+                         ) -> tuple[list, bool]:
+    """Fan the candidate specs over a process pool; reduce in spec order.
+
+    The first candidate is always awaited (compile needs at least one
+    mapping); afterwards each result gets whatever budget remains, and
+    a timeout abandons the rest — the surviving set is a prefix of the
+    fixed spec order, never a function of which worker finished first.
+    """
+    import concurrent.futures as cf
+    import multiprocessing
+
+    entries: list[tuple[CandidateTrace, PartitionResult]] = []
+    exhausted = False
+    budget = None if deadline is None \
+        else max(deadline - time.perf_counter(), 0.05)
+    ctx = multiprocessing.get_context("spawn")
+    with cf.ProcessPoolExecutor(max_workers=cfg.workers,
+                                mp_context=ctx) as ex:
+        futs = [ex.submit(_eval_spec, g, hw, s, cfg.seed, cfg.max_iters,
+                          budget) for s in specs]
+        for i, fut in enumerate(futs):
+            timeout = None
+            if i > 0 and deadline is not None:
+                timeout = max(deadline - time.perf_counter(), 0.0)
+            try:
+                res, secs = fut.result(timeout=timeout)
+            except cf.TimeoutError:
+                exhausted = True
+                for other in futs[i:]:
+                    other.cancel()
+                ex.shutdown(wait=False, cancel_futures=True)
+                break
+            entries.append((_trace_of(specs[i], cfg, res, secs), res))
+    return entries, exhausted
+
+
 def portfolio_search(g: SNNGraph, hw: HardwareConfig,
                      config: SearchConfig | None = None):
     """Joint portfolio search over (mapping, schedule strategy) pairs.
@@ -501,32 +614,55 @@ def portfolio_search(g: SNNGraph, hw: HardwareConfig,
     t0 = time.perf_counter()
     deadline = None if cfg.budget_seconds is None else t0 + cfg.budget_seconds
     exhausted = False
+    extras = _resolve_extras(cfg, g)
 
-    entries: list[tuple[CandidateTrace, PartitionResult]] = []
-    if cfg.include_baselines:
-        for name, fn in BASELINES.items():
-            if deadline is not None and time.perf_counter() >= deadline:
+    if cfg.workers > 1:
+        specs: list[tuple] = []
+        if cfg.include_baselines:
+            specs += [("baseline", name) for name in BASELINES]
+        specs += [("strategy", name) for name in extras]
+        specs += [("framework", cfg.seed + k)
+                  for k in range(max(cfg.restarts, 1))]
+        entries, exhausted = _parallel_candidates(g, hw, cfg, specs,
+                                                  deadline)
+    else:
+        entries = []
+        if cfg.include_baselines:
+            for name, fn in BASELINES.items():
+                if deadline is not None and time.perf_counter() >= deadline:
+                    exhausted = True
+                    break
+                tb = time.perf_counter()
+                res = fn(g, hw)
+                entries.append((CandidateTrace(
+                    strategy=name, seed=None, feasible=res.feasible,
+                    min_score=int(res.scores.min()),
+                    iterations=res.iterations,
+                    seconds=time.perf_counter() - tb), res))
+
+        for name in extras:
+            if entries and deadline is not None \
+                    and time.perf_counter() >= deadline:
                 exhausted = True
                 break
-            tb = time.perf_counter()
-            res = fn(g, hw)
-            entries.append((CandidateTrace(
-                strategy=name, seed=None, feasible=res.feasible,
-                min_score=int(res.scores.min()), iterations=res.iterations,
-                seconds=time.perf_counter() - tb), res))
+            res, secs = _eval_spec(g, hw, ("strategy", name), cfg.seed,
+                                   cfg.max_iters)
+            entries.append((_trace_of(("strategy", name), cfg, res, secs),
+                            res))
 
-    tb = time.perf_counter()
-    _, fw_results, fw_exhausted = framework_partition(
-        g, hw, seed=cfg.seed, restarts=cfg.restarts,
-        max_iters=cfg.max_iters, early_exit=cfg.early_exit,
-        deadline=deadline)
-    exhausted |= fw_exhausted
-    fw_seconds = time.perf_counter() - tb
-    for k, res in enumerate(fw_results):
-        entries.append((CandidateTrace(
-            strategy="framework", seed=cfg.seed + k, feasible=res.feasible,
-            min_score=int(res.scores.min()), iterations=res.iterations,
-            seconds=fw_seconds / max(len(fw_results), 1)), res))
+        tb = time.perf_counter()
+        _, fw_results, fw_exhausted = framework_partition(
+            g, hw, seed=cfg.seed, restarts=cfg.restarts,
+            max_iters=cfg.max_iters, early_exit=cfg.early_exit,
+            deadline=deadline)
+        exhausted |= fw_exhausted
+        fw_seconds = time.perf_counter() - tb
+        for k, res in enumerate(fw_results):
+            entries.append((CandidateTrace(
+                strategy="framework", seed=cfg.seed + k,
+                feasible=res.feasible, min_score=int(res.scores.min()),
+                iterations=res.iterations,
+                seconds=fw_seconds / max(len(fw_results), 1)), res))
 
     # schedule the feasible candidates under EVERY registered schedule
     # strategy: min OT depth over strategies decides the race, with

@@ -46,6 +46,34 @@ class FrameworkStrategy:
 
 
 @dataclasses.dataclass(frozen=True)
+class HypergraphStrategy:
+    """Greedy hyperedge-overlap mapping + FM refinement (DESIGN.md §11);
+    deterministic, so seed/iters/restarts are ignored."""
+
+    name: str = "hypergraph"
+
+    def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
+                  max_iters: int = 20000, restarts: int = 1
+                  ) -> PartitionResult:
+        from repro.core.mapping.hypergraph import hypergraph_partition
+        return hypergraph_partition(g, hw, seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelStrategy:
+    """Coarsen–partition–refine for compiler-scale graphs (DESIGN.md §11)."""
+
+    name: str = "multilevel"
+
+    def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
+                  max_iters: int = 20000, restarts: int = 1
+                  ) -> PartitionResult:
+        from repro.core.mapping.multilevel import multilevel_partition
+        return multilevel_partition(g, hw, seed=seed, max_iters=max_iters,
+                                    restarts=restarts)
+
+
+@dataclasses.dataclass(frozen=True)
 class BaselineStrategy:
     """A deterministic baseline (paper §7.4.1); seed/iters are ignored."""
 
@@ -85,6 +113,8 @@ def get_strategy(name: str) -> MappingStrategy:
 def _register_builtins() -> None:
     from repro.core.baselines import BASELINES
     register_strategy(FrameworkStrategy(), replace=True)
+    register_strategy(HypergraphStrategy(), replace=True)
+    register_strategy(MultilevelStrategy(), replace=True)
     for name, fn in BASELINES.items():
         register_strategy(BaselineStrategy(name, fn), replace=True)
 

@@ -1,5 +1,15 @@
 """SupraSNN memory model: Unified-Memory constraint Eq. (9), SPU score
 Eq. (10), and the total-memory expression Eq. (11).
+
+Multi-chip (DESIGN.md §11): a :class:`HardwareConfig` may describe
+``n_chips`` virtual XC7Z-class devices. ``n_spus`` stays the TOTAL
+partition count (the flattened virtual tree every mapper/scheduler/
+executor already works on); the chips merely group consecutive SPU ids
+— chip of SPU ``i`` is ``i // spus_per_chip``. The memory expressions
+become per-chip structures replicated ``n_chips`` times and the cycle
+model charges ``inter_chip_hop_cycles`` per forwarded spike packet;
+with ``n_chips=1`` every number is bit-identical to the single-chip
+model (tests/test_multilevel.py pins the conservation).
 """
 from __future__ import annotations
 
@@ -20,14 +30,32 @@ class HardwareConfig:
     max_neurons: int = 910           # N   (addressing capacity)
     max_post_neurons: int = 126      # N_p (Neuron State SRAM depth)
     clock_mhz: float = 100.0
+    # multi-chip dimension (DESIGN.md §11): n_spus is the TOTAL SPU count
+    # across n_chips devices; chips group consecutive SPU ids
+    n_chips: int = 1
+    inter_chip_hop_cycles: int = 8   # per forwarded spike packet
 
     def __post_init__(self):
         assert self.n_spus >= 2 and (self.n_spus & (self.n_spus - 1)) == 0, \
             "MC/ME trees require a power-of-two SPU count"
+        assert self.n_chips >= 1 and \
+            (self.n_chips & (self.n_chips - 1)) == 0, \
+            "n_chips must be a power of two (chip fabric mirrors the tree)"
+        assert self.n_spus % self.n_chips == 0 and \
+            self.n_spus // self.n_chips >= 2, \
+            "each chip needs its own power-of-two MC/ME subtree (>= 2 SPUs)"
 
     @property
     def tree_depth(self) -> int:
         return int(math.log2(self.n_spus))
+
+    @property
+    def spus_per_chip(self) -> int:
+        return self.n_spus // self.n_chips
+
+    def chip_of(self, spu):
+        """Chip id of an SPU id (scalar or array)."""
+        return spu // self.spus_per_chip
 
 
 def spu_usage(n_unique_weights: int, n_posts: int, k: int) -> int:
@@ -73,17 +101,25 @@ def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:
     (``m * ceil(n / 18Kb)`` halves), so it belongs in the bit total too
     — the two models must agree about what memory exists
     (tests/test_scheduling.py pins both against the Table 2 point).
+
+    With ``n_chips > 1`` the expression is the per-chip structure set
+    (routing over the chip's own SPUs, one Neuron Unit per chip — every
+    chip must address every neuron, so routing/spike bitmaps span the
+    full N) replicated ``n_chips`` times; at ``n_chips=1`` it reduces
+    bit-identically to the single-chip Eq. (11).
     """
-    n, m, np_ = hw.max_neurons, hw.n_spus, hw.max_post_neurons
+    n, np_ = hw.max_neurons, hw.max_post_neurons
+    m_chip = hw.spus_per_chip                # SPUs per device
     s_um, k, ww = hw.unified_mem_depth, hw.concentration, hw.weight_bits
     lg = lambda x: math.ceil(math.log2(max(x, 2)))
     ot_entry = 2 * lg(s_um) + lg(k) + lg(n) + 2
-    routing = n * m
+    routing = n * m_chip
     ot = op_table_depth * ot_entry
     um = k * ww * s_um
     spike = n                                # per-SPU Spike Memory bitmap
     nu = np_ * (lg(n) + k * ww - lg(np_) + 1)
-    return routing + m * (ot + um + spike) + nu
+    per_chip = routing + m_chip * (ot + um + spike) + nu
+    return hw.n_chips * per_chip
 
 
 def total_memory_kb(hw: HardwareConfig, op_table_depth: int) -> float:
@@ -93,16 +129,24 @@ def total_memory_kb(hw: HardwareConfig, op_table_depth: int) -> float:
 def bram_count(hw: HardwareConfig, op_table_depth: int,
                bram_kbits: int = 18) -> float:
     """Simple 7-series packing model: each physical memory structure rounds
-    up to half-BRAM (18 Kb) granularity, reported in units of 36 Kb BRAMs."""
-    n, m, np_ = hw.max_neurons, hw.n_spus, hw.max_post_neurons
+    up to half-BRAM (18 Kb) granularity, reported in units of 36 Kb BRAMs.
+
+    With ``n_chips > 1`` the packing is done per chip (each device owns
+    its routing table, OT/UM/spike structures for its own SPUs, and a
+    Neuron Unit) and summed; bit-identical to the single-chip packing
+    at ``n_chips=1``.
+    """
+    n, np_ = hw.max_neurons, hw.max_post_neurons
+    m_chip = hw.spus_per_chip
     s_um, k, ww = hw.unified_mem_depth, hw.concentration, hw.weight_bits
     lg = lambda x: math.ceil(math.log2(max(x, 2)))
     ot_entry = 2 * lg(s_um) + lg(k) + lg(n) + 2
     halves = 0
-    halves += math.ceil(n * m / (bram_kbits * 1024))                 # routing
-    halves += m * math.ceil(op_table_depth * ot_entry / (bram_kbits * 1024))
-    halves += m * math.ceil(k * ww * s_um / (bram_kbits * 1024))     # UM
-    halves += m * math.ceil(n / (bram_kbits * 1024))                 # spike mem
+    halves += math.ceil(n * m_chip / (bram_kbits * 1024))            # routing
+    halves += m_chip * math.ceil(op_table_depth * ot_entry
+                                 / (bram_kbits * 1024))
+    halves += m_chip * math.ceil(k * ww * s_um / (bram_kbits * 1024))  # UM
+    halves += m_chip * math.ceil(n / (bram_kbits * 1024))          # spike mem
     halves += math.ceil(np_ * (lg(n) + k * ww - lg(np_) + 1)
-                        / (bram_kbits * 1024))                       # NU state
-    return halves / 2.0
+                        / (bram_kbits * 1024))                     # NU state
+    return hw.n_chips * halves / 2.0

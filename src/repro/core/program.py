@@ -63,6 +63,10 @@ from repro.snn.quantize import QuantizedSNN
 
 PROGRAM_FORMAT = "suprasnn-program"
 PROGRAM_FORMAT_VERSION = 1
+# HardwareConfig fields added after format v1 shipped; serialized only at
+# non-default values (so old artifacts and new single-chip ones share the
+# same header schema, and v1 readers never see them)
+_POST_V1_HW_FIELDS = frozenset({"n_chips", "inter_chip_hop_cycles"})
 
 
 @dataclasses.dataclass
@@ -317,23 +321,57 @@ class Program:
 
     def profile(self, stats: dict | np.ndarray, *,
                 n_synapses: int | None = None,
-                power: PowerModel | None = None) -> ProfileReport:
+                power: PowerModel | None = None,
+                inter_chip_counts: np.ndarray | None = None
+                ) -> ProfileReport:
         """CycleModel timing/energy + resource report in one call.
 
         ``stats`` is the dict returned by :meth:`run` (or a raw
         packet-counts array, ``[T]`` or ``[B, T]``). ``n_synapses``
         overrides the energy-per-synapse denominator (e.g. the
         pre-pruning synapse count of a quantized model); defaults to
-        the mapped graph's nonzero synapses.
+        the mapped graph's nonzero synapses. On a multi-chip target
+        pass ``inter_chip_counts`` (same shape as the packet counts;
+        see :meth:`inter_chip_counts`) to charge the forwarded packets
+        their hop cost — omitted, the profile is the single-chip model.
         """
         pkts = stats["packet_counts"] if isinstance(stats, dict) else stats
         pkts = np.atleast_2d(np.asarray(pkts))
+        if inter_chip_counts is None:
+            ics = [None] * pkts.shape[0]
+        else:
+            ic = np.atleast_2d(np.asarray(inter_chip_counts))
+            if ic.shape != pkts.shape:
+                raise ValueError(f"inter_chip_counts shape {ic.shape} != "
+                                 f"packet_counts shape {pkts.shape}")
+            ics = list(ic)
         n_syn = self.graph.n_synapses if n_synapses is None else n_synapses
         cm = CycleModel(self.hw, power)
-        per = [cm.run(row, self.tables.depth, n_syn) for row in pkts]
+        per = [cm.run(row, self.tables.depth, n_syn, inter_chip_counts=i)
+               for row, i in zip(pkts, ics)]
         return ProfileReport(cycle=_aggregate_cycles(per),
                              resources=self.report.resources,
                              per_sample=per)
+
+    # -- multi-chip accounting (DESIGN.md §11) --------------------------------
+
+    def chip_span(self) -> np.ndarray:
+        """[n_neurons] distinct chips each neuron's fan-out spans under
+        this program's mapping (all-ones/zeros on a single-chip hw)."""
+        from repro.core.mapping.hypergraph import chip_span
+        return chip_span(self.graph, self.tables.assign, self.hw)
+
+    def inter_chip_counts(self, ext_spikes: np.ndarray,
+                          spikes: np.ndarray) -> np.ndarray:
+        """Per-timestep inter-chip forwarded packets of a run — the
+        companion of the ``packet_counts`` stat, for
+        :meth:`profile`'s ``inter_chip_counts=``. ``ext_spikes`` and
+        ``spikes`` are the run's input and output spike trains
+        (``[T, n]`` or ``[B, T, n]``). All zeros when ``n_chips == 1``.
+        """
+        from repro.core.mapping.hypergraph import inter_chip_packet_counts
+        return inter_chip_packet_counts(ext_spikes, spikes,
+                                        self.chip_span())
 
     # -- initialization stream ----------------------------------------------
 
@@ -370,8 +408,14 @@ class Program:
                         "v_threshold": int(g.lif.v_threshold),
                         "v_reset": int(g.lif.v_reset)},
             },
+            # post-v1 HardwareConfig fields are elided at their defaults so
+            # single-chip artifacts keep the exact v1 header bytes
+            # (tests/test_serving.py golden roundtrip); Program.load fills
+            # absent keys from the dataclass defaults
             "hw": {f.name: getattr(hw, f.name)
-                   for f in dataclasses.fields(hw)},
+                   for f in dataclasses.fields(hw)
+                   if f.name not in _POST_V1_HW_FIELDS
+                   or getattr(hw, f.name) != f.default},
             "report": {
                 "method": rep.method,
                 "feasible": bool(rep.feasible),
@@ -492,7 +536,8 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
             method: str = "framework", engine: str = "jax", seed: int = 0,
             validate: bool = True, max_iters: int = 20000,
             restarts: int = 1, schedule_method: str = "slack",
-            search: SearchConfig | None = None) -> Program:
+            search: SearchConfig | None = None,
+            n_chips: int | None = None) -> Program:
     """Compile an SNN (graph or quantized model) into a :class:`Program`.
 
     Runs the explicit pipeline partition -> schedule -> [validate] ->
@@ -503,6 +548,14 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     the registered
     :class:`~repro.core.scheduling.ScheduleStrategy` ordering the post
     transmissions (``'slack'`` is the original scheduler).
+
+    ``n_chips=N`` scales the target out to N virtual devices
+    (DESIGN.md §11): ``hw`` describes ONE chip and is replicated —
+    ``n_spus`` becomes ``hw.n_spus * N`` over the flattened virtual
+    tree every pass already understands, and the memory/cycle models
+    pick up the per-chip structures and inter-chip hop costs. The
+    mapped program's chip traffic is exposed by
+    :meth:`Program.chip_span` / :meth:`Program.inter_chip_counts`.
 
     Passing ``search=SearchConfig(...)`` replaces the single partition
     pass with the joint portfolio search (framework restarts raced
@@ -516,6 +569,13 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
     t0 = time.time()
+    if n_chips is not None and n_chips != 1:
+        if hw.n_chips != 1:
+            raise ValueError(
+                f"compile(n_chips={n_chips}) replicates a SINGLE-chip "
+                f"HardwareConfig; hw already has n_chips={hw.n_chips}")
+        hw = dataclasses.replace(hw, n_spus=hw.n_spus * n_chips,
+                                 n_chips=n_chips)
     g = (from_quantized(g_or_qsnn) if isinstance(g_or_qsnn, QuantizedSNN)
          else g_or_qsnn)
     trace = None

@@ -159,7 +159,8 @@ def test_baseline_full_valid_assignment(name):
 
 
 def test_registry_has_framework_and_all_baselines():
-    assert set(STRATEGIES) == {"framework"} | set(BASELINES)
+    assert set(STRATEGIES) == \
+        {"framework", "hypergraph", "multilevel"} | set(BASELINES)
     assert isinstance(STRATEGIES["framework"], FrameworkStrategy)
 
 
@@ -239,7 +240,7 @@ def test_portfolio_trace_contents_and_ranking():
     part, trace, tables = portfolio_search(
         g, hw, SearchConfig(restarts=2, max_iters=2000, early_exit=False))
     names = {c.strategy for c in trace.candidates}
-    assert names == {"framework"} | set(BASELINES)
+    assert names == {"framework", "hypergraph"} | set(BASELINES)
     feas = [c for c in trace.candidates if c.feasible]
     assert feas, "relaxed memory: everything should be feasible"
     # winner minimizes (OT depth, memory-line usage) over the feasible

@@ -1,0 +1,339 @@
+"""Compiler-scale mapping subsystem (DESIGN.md §11): hypergraph/
+multilevel strategies, FM refinement properties, multi-chip accounting,
+the synthetic-scale generator, and the portfolio-search satellites
+(process workers, in-sweep deadline)."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_ext, make_feedforward, make_hw
+from repro.core import HardwareConfig, SearchConfig, compile, random_graph
+from repro.core.engine import CycleModel
+from repro.core.mapping.hypergraph import (chip_span, hyper_view,
+                                           hypergraph_partition,
+                                           inter_chip_packet_counts,
+                                           mapping_traffic, multicast_dests,
+                                           refine_mapping)
+from repro.core.mapping.multilevel import coarsen_graph, multilevel_partition
+from repro.core.mapping.search import framework_partition, portfolio_search
+from repro.core.memory_model import (bram_count, scores_from_assignment,
+                                     total_memory_bits)
+from repro.core.scale import scale_hw, synthetic_graph
+from repro.core.scheduling import schedule, validate_schedule
+
+
+def _graphs():
+    return [("ff", make_feedforward(16, 12, 150, seed=5)),
+            ("recurrent", random_graph(16, 32, 900, seed=2)),
+            ("recurrent2", random_graph(8, 24, 500, seed=11))]
+
+
+# ---------------------------------------------------------------------------
+# The hyperedge view.
+# ---------------------------------------------------------------------------
+
+def test_hyper_view_structure():
+    g = random_graph(10, 20, 300, seed=0)
+    hv = hyper_view(g)
+    assert hv.fanin_ptr[0] == 0 and hv.fanin_ptr[-1] == g.n_synapses
+    seen = np.concatenate([hv.fanin(j) for j in range(hv.n_posts)])
+    assert np.array_equal(np.sort(seen), np.arange(g.n_synapses))
+    for j in (0, hv.n_posts // 2, hv.n_posts - 1):
+        assert (g.post[hv.fanin(j)] == hv.posts[j]).all()
+    # fan-out CSR: each pre's hyperedge lists exactly its posts
+    for q in (0, g.n_inputs, g.n_neurons - 1):
+        mine = np.sort(g.post[g.pre == q])
+        got = hv.fanout_post[hv.fanout_ptr[q]:hv.fanout_ptr[q + 1]]
+        assert np.array_equal(np.sort(got), mine)
+
+
+# ---------------------------------------------------------------------------
+# Strategy validity: every mapping schedules + validates + scores right.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,g", _graphs())
+@pytest.mark.parametrize("method", ["hypergraph", "multilevel"])
+def test_strategies_valid_and_schedulable(kind, g, method):
+    hw = make_hw(g, m=4, k=2)
+    prog = compile(g, hw, method=method)
+    assert prog.feasible, f"{method} infeasible on generous hw ({kind})"
+    validate_schedule(g, prog.tables)
+    assert np.array_equal(
+        prog.part.scores,
+        scores_from_assignment(g.weight, g.post, prog.part.assign, hw))
+    assert total_memory_bits(hw, prog.ot_depth) > 0
+    # mapped execution still matches the oracle bit-exactly
+    ext = make_ext(g, 1, 8, seed=3)[0]
+    s_m, v_m, _ = prog.run(ext, "python")
+    s_o, v_o, _ = prog.run(ext, "oracle")
+    assert np.array_equal(s_m, s_o) and np.array_equal(v_m, v_o)
+
+
+def test_multilevel_coarsen_path_valid():
+    # force the real coarsen->partition->refine path on a small graph
+    g = random_graph(24, 48, 3000, seed=7)
+    hw = make_hw(g, m=8, k=3)
+    res = multilevel_partition(g, hw, seed=0, coarse_target=500,
+                               max_iters=3000)
+    assert res.feasible
+    tables = schedule(g, res.assign, hw)
+    validate_schedule(g, tables)
+
+
+def test_coarsen_graph_maps_are_consistent():
+    g = random_graph(24, 48, 3000, seed=7)
+    hw = make_hw(g, m=8, k=3)
+    cg = coarsen_graph(g, hw, coarse_target=500)
+    gc = cg.graph
+    gc.validate()
+    assert cg.levels >= 1 and cg.n_clusters < g.n_internal
+    assert gc.n_synapses < g.n_synapses
+    # every fine synapse lands on the coarse synapse of its (pre, cluster)
+    cl = cg.cluster[g.post.astype(np.int64) - g.n_inputs]
+    assert np.array_equal(gc.pre[cg.syn_map], g.pre)
+    assert np.array_equal(gc.post[cg.syn_map].astype(np.int64),
+                          g.n_neurons + cl)
+    # clusters partition the fine posts
+    assert cg.cluster.shape == (g.n_internal,)
+    assert set(np.unique(cg.cluster)) == set(range(cg.n_clusters))
+
+
+# ---------------------------------------------------------------------------
+# Refinement never worsens the extended objective (overflow, cut-traffic).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n_chips", [1, 2])
+def test_refinement_never_worsens(seed, n_chips):
+    g = random_graph(20, 40, 1500, seed=seed)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=40, concentration=3,
+                        max_neurons=128, max_post_neurons=64,
+                        n_chips=n_chips)
+    rng = np.random.default_rng(seed)
+    a0 = rng.integers(0, hw.n_spus, g.n_synapses).astype(np.int32)
+    a1, st = refine_mapping(g, hw, a0, passes=3)
+    # strict-accept FM: the (overflow, traffic) objective is monotone
+    assert (st.overflow_after, st.traffic_after) <= \
+        (st.overflow_before, st.traffic_before)
+    # the stats' incremental accounting matches ground truth
+    hop = hw.inter_chip_hop_cycles if n_chips > 1 else 0
+    for a, over, traf in ((a0, st.overflow_before, st.traffic_before),
+                          (a1, st.overflow_after, st.traffic_after)):
+        sc = scores_from_assignment(g.weight, g.post, a, hw)
+        t = mapping_traffic(g, a, hw)
+        assert over == int(np.maximum(-sc, 0).sum())
+        assert traf == t["dests_total"] + hop * t["inter_chip_total"]
+
+
+def test_refinement_repairs_projected_overflow():
+    # the multilevel contract: refinement drives a messy projected
+    # mapping to Eq. (9) feasibility on a satisfiable instance
+    g = random_graph(20, 40, 1500, seed=1)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=40, concentration=3,
+                        max_neurons=128, max_post_neurons=64)
+    a0 = np.random.default_rng(0).integers(0, 8, g.n_synapses) \
+        .astype(np.int32)
+    _, st = refine_mapping(g, hw, a0, passes=4)
+    assert st.overflow_before > 0 and st.overflow_after == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-chip accounting conserves the single-chip totals at n_chips=1.
+# ---------------------------------------------------------------------------
+
+def test_multichip_conservation_at_one_chip():
+    g = random_graph(16, 32, 900, seed=2)
+    hw1 = make_hw(g, m=8, k=2)
+    assert hw1.n_chips == 1
+    prog = compile(g, hw1, method="hypergraph")
+    # no forwarded packets, ever
+    assert (prog.chip_span() <= 1).all()
+    ext = make_ext(g, 2, 10, seed=0)
+    s, _, stats = prog.run(ext, "oracle")
+    ic = prog.inter_chip_counts(ext, s)
+    assert ic.shape == stats["packet_counts"].shape and (ic == 0).all()
+    # the cycle model with explicit zero forwards is bit-identical
+    r0 = prog.profile(stats)
+    r1 = prog.profile(stats, inter_chip_counts=ic)
+    assert r0.cycle == r1.cycle
+    # compile(n_chips=1) is the identity
+    prog1 = compile(g, hw1, method="hypergraph", n_chips=1)
+    assert prog1.hw == hw1
+
+
+def test_multichip_packet_accounting():
+    g = random_graph(16, 32, 900, seed=2)
+    hw1 = make_hw(g, m=8, k=2)
+    hw4 = dataclasses.replace(hw1, n_chips=4)
+    res = hypergraph_partition(g, hw1)
+    # fabric deliveries are invariant under the chip grouping; chip
+    # spans are bounded by the destination counts
+    d = multicast_dests(g, res.assign, hw1.n_spus)
+    sp1, sp4 = chip_span(g, res.assign, hw1), chip_span(g, res.assign, hw4)
+    assert mapping_traffic(g, res.assign, hw1)["dests_total"] == \
+        mapping_traffic(g, res.assign, hw4)["dests_total"]
+    assert (sp1 <= 1).all() and (sp4 <= np.minimum(d, 4)).all()
+    assert (sp4[d > 0] >= 1).all()
+    # forwarded packets charge hop cycles in the distribution phase
+    ext = make_ext(g, 1, 12, seed=1)[0]
+    spikes = make_ext(g, 1, 12, seed=2)[0][:, :g.n_internal]
+    ic = inter_chip_packet_counts(ext, spikes, sp4)
+    pkts = np.arange(12, dtype=np.int64) + 1
+    cm = CycleModel(hw4)
+    base = cm.run(pkts, 10, g.n_synapses)
+    multi = cm.run(pkts, 10, g.n_synapses, inter_chip_counts=ic)
+    assert multi.cycles_distribution - base.cycles_distribution == \
+        int(ic.sum()) * hw4.inter_chip_hop_cycles
+    assert multi.cycles_synaptic == base.cycles_synaptic
+
+
+def test_compile_n_chips_replicates_per_chip_config():
+    g = random_graph(16, 32, 900, seed=2)
+    hw1 = make_hw(g, m=4, k=2)
+    prog = compile(g, hw1, method="hypergraph", n_chips=2)
+    assert prog.hw.n_chips == 2 and prog.hw.n_spus == 2 * hw1.n_spus
+    assert prog.hw.spus_per_chip == hw1.n_spus
+    # mapping/scheduling run on the flattened tree: identical to an
+    # explicitly flattened single-chip config
+    flat = dataclasses.replace(hw1, n_spus=2 * hw1.n_spus)
+    ref = compile(g, flat, method="hypergraph")
+    assert np.array_equal(prog.part.assign, ref.part.assign)
+    assert prog.ot_depth == ref.ot_depth
+    # memory model counts per-chip structures replicated n_chips times
+    assert total_memory_bits(prog.hw, prog.ot_depth) != \
+        total_memory_bits(flat, prog.ot_depth)
+    assert bram_count(prog.hw, prog.ot_depth) > 0
+    with pytest.raises(ValueError, match="SINGLE-chip"):
+        compile(g, prog.hw, n_chips=2)
+
+
+def test_multichip_program_roundtrips(tmp_path):
+    g = random_graph(16, 32, 900, seed=2)
+    prog = compile(g, make_hw(g, m=4, k=2), method="hypergraph", n_chips=2)
+    path = prog.save(tmp_path / "multichip")
+    loaded = type(prog).load(path)
+    assert loaded.hw == prog.hw
+    assert np.array_equal(loaded.tables.pre, prog.tables.pre)
+    assert np.array_equal(loaded.part.assign, prog.part.assign)
+
+
+# ---------------------------------------------------------------------------
+# The synthetic-scale generator.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["layered", "recurrent", "mixed"])
+def test_synthetic_graph_shapes(topology):
+    g = synthetic_graph(20_000, topology=topology, skew=1.0, seed=3)
+    g.validate()
+    assert g.n_synapses == 20_000
+    assert g.n_inputs > 0 and g.n_internal > 0
+    if topology != "layered":        # some recurrence: internal pres exist
+        assert (g.pre >= g.n_inputs).any()
+
+
+def test_synthetic_graph_deterministic_and_skewed():
+    a = synthetic_graph(10_000, topology="mixed", skew=1.0, seed=9)
+    b = synthetic_graph(10_000, topology="mixed", skew=1.0, seed=9)
+    assert np.array_equal(a.pre, b.pre) and \
+        np.array_equal(a.weight, b.weight)
+    # sparse enough that fan-out isn't capped by layer saturation
+    flat = synthetic_graph(10_000, topology="layered", skew=0.0, seed=9,
+                           neurons_per_synapse=0.1)
+    hub = synthetic_graph(10_000, topology="layered", skew=2.0, seed=9,
+                          neurons_per_synapse=0.1)
+    assert np.bincount(hub.pre).max() > np.bincount(flat.pre).max()
+    hw = scale_hw(a, n_chips=2, spus_per_chip=8)
+    assert hw.n_spus == 16 and hw.n_chips == 2
+
+
+# ---------------------------------------------------------------------------
+# Portfolio satellites: in-sweep deadline + process workers.
+# ---------------------------------------------------------------------------
+
+def _unsat_instance():
+    g = random_graph(12, 24, 800, seed=3)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=5, concentration=3,
+                        max_neurons=64, max_post_neurons=32)
+    return g, hw
+
+
+def test_deadline_enforced_inside_restart_sweep():
+    g, hw = _unsat_instance()
+    budget = 0.15
+    t0 = time.perf_counter()
+    _, _, exhausted = framework_partition(
+        g, hw, seed=0, restarts=16, max_iters=10 ** 8,
+        early_exit=False, deadline=t0 + budget)
+    elapsed = time.perf_counter() - t0
+    assert exhausted
+    # a 16-restart sweep of an unbounded search must stop within a
+    # step of the deadline, not a full sweep (regression: the check
+    # used to run only between sweeps)
+    assert elapsed < budget + 0.5, f"overshot the deadline: {elapsed:.2f}s"
+
+
+def test_portfolio_workers_parity_with_inline():
+    g = random_graph(16, 32, 500, seed=8)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    cfg = dict(restarts=2, max_iters=2000, early_exit=False)
+    part1, trace1, tables1 = portfolio_search(
+        g, hw, SearchConfig(**cfg, workers=1))
+    part2, trace2, tables2 = portfolio_search(
+        g, hw, SearchConfig(**cfg, workers=2))
+    # deterministic reduction: same candidates, same winner, same bits
+    assert [c.strategy for c in trace1.candidates] == \
+        [c.strategy for c in trace2.candidates]
+    s1, s2 = trace1.selected, trace2.selected
+    assert (s1.strategy, s1.seed, s1.ot_depth, s1.memory_lines) == \
+        (s2.strategy, s2.seed, s2.ot_depth, s2.memory_lines)
+    assert np.array_equal(part1.assign, part2.assign)
+    assert tables1.depth == tables2.depth
+
+
+def test_portfolio_workers_budget_prefix():
+    g, hw = _unsat_instance()
+    t0 = time.perf_counter()
+    part, trace, _ = portfolio_search(g, hw, SearchConfig(
+        restarts=4, max_iters=10 ** 8, budget_seconds=1.0, workers=2))
+    elapsed = time.perf_counter() - t0
+    assert trace.budget_exhausted
+    assert len(trace.candidates) >= 1      # first candidate always lands
+    assert part is not None
+    assert elapsed < 30.0                  # pool teardown slack
+
+
+def test_portfolio_races_hypergraph_by_default():
+    g = random_graph(16, 32, 500, seed=8)
+    hw = HardwareConfig(n_spus=8, unified_mem_depth=4096, concentration=3,
+                        max_neurons=256, max_post_neurons=128)
+    _, trace, _ = portfolio_search(g, hw, SearchConfig(restarts=1,
+                                                       max_iters=2000))
+    names = [c.strategy for c in trace.candidates]
+    assert "hypergraph" in names and "multilevel" not in names
+    _, trace0, _ = portfolio_search(g, hw, SearchConfig(
+        restarts=1, max_iters=2000, extra_strategies=()))
+    assert "hypergraph" not in [c.strategy for c in trace0.candidates]
+
+
+# ---------------------------------------------------------------------------
+# Compiler scale (slow lane).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multilevel_compiles_large_multichip_graph():
+    g = synthetic_graph(100_000, topology="mixed", skew=1.0, seed=0)
+    hw4 = scale_hw(g, n_chips=4, spus_per_chip=16)
+    hw1 = dataclasses.replace(hw4, n_spus=hw4.spus_per_chip, n_chips=1)
+    prog = compile(g, hw1, method="multilevel", n_chips=4)  # validates
+    assert prog.feasible
+    assert prog.hw.n_spus == 64 and prog.hw.n_chips == 4
+    traffic = mapping_traffic(g, prog.tables.assign, prog.hw)
+    assert traffic["inter_chip_total"] > 0
+    ext = make_ext(g, 1, 5, seed=0)[0]
+    s, _, stats = prog.run(ext, "oracle")
+    rep = prog.profile(stats,
+                       inter_chip_counts=prog.inter_chip_counts(ext, s))
+    assert rep.cycle.cycles_total > 0

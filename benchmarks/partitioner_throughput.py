@@ -61,9 +61,38 @@ def _timed(fn, repeats: int) -> tuple[float, object]:
 
 def run(quick: bool = False) -> list[tuple]:
     g, hw = fig13_shd_instance()    # quick shortens the run, not the shape
-    iters = 1500 if quick else 3000
-    repeats = 3        # best-of-3: min wall time is the robust estimator
+    if quick:
+        # CI smoke lane: the best-of-3 full-fidelity scan above burned
+        # ~25 s per run for a claim the tier-1 parity tests already pin
+        # bit-exactly. Smoke keeps one reduced-iteration sampled-scan
+        # timing (the compile default, scan_cap=384) as the tracked
+        # trajectory row; the >= 10x acceptance measurement only runs in
+        # full (non-quick) mode.
+        iters = 400
+        legacy_s, legacy = _timed(
+            lambda: partition_legacy(g, hw, seed=0, max_iters=iters), 1)
+        vec_s, vec = _timed(
+            lambda: partition(g, hw, seed=0, max_iters=iters), 1)
+        parity = (np.array_equal(legacy.assign, vec.assign)
+                  and np.array_equal(legacy.scores, vec.scores)
+                  and legacy.iterations == vec.iterations)
+        assert parity, "vectorized partitioner diverged from the legacy loop"
+        rows = [
+            ("partitioner.instance.synapses", g.n_synapses,
+             "fig13 SHD shape"),
+            ("partitioner.iterations", iters, "smoke: reduced"),
+            ("partitioner.parity", float(parity), "bit-exact assignment"),
+            ("partitioner.sampled.legacy.seconds", legacy_s,
+             "scan_cap=384"),
+            ("partitioner.sampled.vectorized.seconds", vec_s,
+             "scan_cap=384"),
+            ("partitioner.sampled.speedup", legacy_s / vec_s,
+             "smoke: reduced iters; >=10x bar measured in full mode"),
+        ]
+        return rows + _portfolio_rows()
 
+    iters = 3000
+    repeats = 3        # best-of-3: min wall time is the robust estimator
     legacy_s, legacy = _timed(
         lambda: partition_legacy(g, hw, seed=0, max_iters=iters,
                                  scan_cap=FULL_SCAN), repeats)
@@ -94,7 +123,10 @@ def run(quick: bool = False) -> list[tuple]:
          "scan_cap=384"),
         ("partitioner.sampled.speedup", cap_legacy_s / cap_vec_s, ""),
     ]
+    return rows + _portfolio_rows()
 
+
+def _portfolio_rows() -> list[tuple]:
     # portfolio search on a tight config where the single-seed compile
     # exhausts its budget infeasible; the portfolio both rescues
     # feasibility (another restart / a baseline) and picks the
@@ -111,7 +143,7 @@ def run(quick: bool = False) -> list[tuple]:
     trace = port.report.search
     base_depths = [c.ot_depth for c in trace.candidates
                    if c.feasible and c.strategy != "framework"]
-    rows += [
+    return [
         ("portfolio.single_seed.feasible", float(single.feasible),
          f"max_iters={budget}"),
         ("portfolio.feasible", float(port.feasible), "restarts=8"),
@@ -121,7 +153,6 @@ def run(quick: bool = False) -> list[tuple]:
         ("portfolio.ot_depth", port.ot_depth,
          f"best feasible baseline: {min(base_depths, default=-1)}"),
     ]
-    return rows
 
 
 if __name__ == "__main__":

@@ -445,7 +445,8 @@ class SearchConfig:
     awaited first candidate). ``early_exit`` has no cross-restart
     effect in the parallel path.
     """
-    restarts: int = 4                    # framework population size
+    restarts: int = 4                    # framework population size; also
+                                         # sizes the multilevel coarse race
     seed: int = 0                        # first restart seed
     max_iters: int = 20000               # per-restart iteration budget
     include_baselines: bool = True       # race the round-robin seeds too
@@ -511,7 +512,8 @@ def _resolve_extras(cfg: SearchConfig, g: SNNGraph) -> tuple:
 
 
 def _eval_spec(g: SNNGraph, hw: HardwareConfig, spec: tuple, seed: int,
-               max_iters: int, budget: float | None = None
+               max_iters: int, budget: float | None = None,
+               restarts: int = 1, strategy_workers: int = 1
                ) -> tuple[PartitionResult, float]:
     """Evaluate one mapping candidate (a process-pool work item).
 
@@ -522,6 +524,13 @@ def _eval_spec(g: SNNGraph, hw: HardwareConfig, spec: tuple, seed: int,
     strategies registered at import of ``repro.core.mapping`` exist in
     the children — a custom ``extra_strategies`` entry registered at
     runtime needs ``workers=1`` and surfaces here as a ``KeyError``.
+
+    ``restarts``/``strategy_workers`` parameterize ``("strategy", ...)``
+    specs only (the multilevel coarse-candidate race); framework specs
+    are one restart each by construction. ``strategy_workers`` stays 1
+    inside a pool worker — nesting process pools would oversubscribe —
+    and strategy results are worker-count-invariant, so the serial and
+    parallel portfolio paths still agree.
     """
     kind, val = spec
     t0 = time.perf_counter()
@@ -536,7 +545,9 @@ def _eval_spec(g: SNNGraph, hw: HardwareConfig, spec: tuple, seed: int,
     else:
         from repro.core.mapping.strategies import get_strategy
         res = get_strategy(val).partition(g, hw, seed=seed,
-                                          max_iters=max_iters)
+                                          max_iters=max_iters,
+                                          restarts=restarts,
+                                          workers=strategy_workers)
     return res, time.perf_counter() - t0
 
 
@@ -572,7 +583,7 @@ def _parallel_candidates(g, hw, cfg: SearchConfig, specs: list[tuple],
     with cf.ProcessPoolExecutor(max_workers=cfg.workers,
                                 mp_context=ctx) as ex:
         futs = [ex.submit(_eval_spec, g, hw, s, cfg.seed, cfg.max_iters,
-                          budget) for s in specs]
+                          budget, cfg.restarts) for s in specs]
         for i, fut in enumerate(futs):
             timeout = None
             if i > 0 and deadline is not None:
@@ -646,7 +657,8 @@ def portfolio_search(g: SNNGraph, hw: HardwareConfig,
                 exhausted = True
                 break
             res, secs = _eval_spec(g, hw, ("strategy", name), cfg.seed,
-                                   cfg.max_iters)
+                                   cfg.max_iters, restarts=cfg.restarts,
+                                   strategy_workers=cfg.workers)
             entries.append((_trace_of(("strategy", name), cfg, res, secs),
                             res))
 

@@ -25,8 +25,8 @@ class MappingStrategy(Protocol):
     name: str
 
     def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
-                  max_iters: int = 20000, restarts: int = 1
-                  ) -> PartitionResult:
+                  max_iters: int = 20000, restarts: int = 1,
+                  workers: int = 1) -> PartitionResult:
         ...
 
 
@@ -37,8 +37,8 @@ class FrameworkStrategy:
     name: str = "framework"
 
     def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
-                  max_iters: int = 20000, restarts: int = 1
-                  ) -> PartitionResult:
+                  max_iters: int = 20000, restarts: int = 1,
+                  workers: int = 1) -> PartitionResult:
         winner, _, _ = framework_partition(g, hw, seed=seed,
                                            max_iters=max_iters,
                                            restarts=restarts)
@@ -53,8 +53,8 @@ class HypergraphStrategy:
     name: str = "hypergraph"
 
     def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
-                  max_iters: int = 20000, restarts: int = 1
-                  ) -> PartitionResult:
+                  max_iters: int = 20000, restarts: int = 1,
+                  workers: int = 1) -> PartitionResult:
         from repro.core.mapping.hypergraph import hypergraph_partition
         return hypergraph_partition(g, hw, seed=seed)
 
@@ -66,11 +66,11 @@ class MultilevelStrategy:
     name: str = "multilevel"
 
     def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
-                  max_iters: int = 20000, restarts: int = 1
-                  ) -> PartitionResult:
+                  max_iters: int = 20000, restarts: int = 1,
+                  workers: int = 1) -> PartitionResult:
         from repro.core.mapping.multilevel import multilevel_partition
         return multilevel_partition(g, hw, seed=seed, max_iters=max_iters,
-                                    restarts=restarts)
+                                    restarts=restarts, workers=workers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +81,8 @@ class BaselineStrategy:
     fn: Callable[[SNNGraph, HardwareConfig], PartitionResult]
 
     def partition(self, g: SNNGraph, hw: HardwareConfig, *, seed: int = 0,
-                  max_iters: int = 20000, restarts: int = 1
-                  ) -> PartitionResult:
+                  max_iters: int = 20000, restarts: int = 1,
+                  workers: int = 1) -> PartitionResult:
         return self.fn(g, hw)
 
 

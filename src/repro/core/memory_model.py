@@ -33,7 +33,14 @@ class HardwareConfig:
     # multi-chip dimension (DESIGN.md §11): n_spus is the TOTAL SPU count
     # across n_chips devices; chips group consecutive SPU ids
     n_chips: int = 1
-    inter_chip_hop_cycles: int = 8   # per forwarded spike packet
+    inter_chip_hop_cycles: int = 8   # per inter-chip mesh hop of a packet
+    # 2D-mesh NoC dims (DESIGN.md §12): the chips sit on a mesh_x × mesh_y
+    # grid with XY (dimension-ordered) routing; chip c is at column
+    # ``c % mesh_x``, row ``c // mesh_x``. ``0`` = auto near-square grid
+    # (16 chips -> 4x4, 8 -> 4x2, 2 -> 2x1). The 1D-chain model of §11 is
+    # the ``mesh_y=1`` degenerate case.
+    mesh_x: int = 0
+    mesh_y: int = 0
 
     def __post_init__(self):
         assert self.n_spus >= 2 and (self.n_spus & (self.n_spus - 1)) == 0, \
@@ -44,6 +51,11 @@ class HardwareConfig:
         assert self.n_spus % self.n_chips == 0 and \
             self.n_spus // self.n_chips >= 2, \
             "each chip needs its own power-of-two MC/ME subtree (>= 2 SPUs)"
+        assert (self.mesh_x == 0) == (self.mesh_y == 0), \
+            "give both mesh dims or neither (0, 0 = auto near-square)"
+        if self.mesh_x:
+            assert self.mesh_x * self.mesh_y == self.n_chips, \
+                f"mesh {self.mesh_x}x{self.mesh_y} != n_chips={self.n_chips}"
 
     @property
     def tree_depth(self) -> int:
@@ -53,9 +65,30 @@ class HardwareConfig:
     def spus_per_chip(self) -> int:
         return self.n_spus // self.n_chips
 
+    @property
+    def mesh_dims(self) -> tuple[int, int]:
+        """(mesh_x, mesh_y) with the auto near-square default resolved."""
+        if self.mesh_x:
+            return self.mesh_x, self.mesh_y
+        b = int(math.log2(self.n_chips))
+        x = 1 << ((b + 1) // 2)
+        return x, self.n_chips // x
+
     def chip_of(self, spu):
         """Chip id of an SPU id (scalar or array)."""
         return spu // self.spus_per_chip
+
+    def chip_coords(self, chip):
+        """(col, row) mesh coordinates of a chip id (scalar or array)."""
+        x, _ = self.mesh_dims
+        return chip % x, chip // x
+
+    def chip_hops(self, a, b):
+        """XY-routing hop count between chips ``a`` and ``b`` (Manhattan
+        distance on the mesh; scalar or array)."""
+        ax, ay = self.chip_coords(a)
+        bx, by = self.chip_coords(b)
+        return np.abs(ax - bx) + np.abs(ay - by)
 
 
 def spu_usage(n_unique_weights: int, n_posts: int, k: int) -> int:

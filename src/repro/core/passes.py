@@ -53,6 +53,14 @@ class CompileReport:
     # OT depth under every strategy evaluated for the chosen mapping
     # ({schedule_method: ot_depth} when only one was run)
     schedule_depths: dict | None = None
+    # per-phase wall seconds from the compile-phase profiler (DESIGN.md
+    # §12): the top-level pass phases plus the partitioner's sub-phases
+    # (coarsen/coarse_search/project/place/refine). None when profiling
+    # was disabled.
+    phase_seconds: dict | None = None
+    # per-phase net allocation MB (only when an alloc=True profiler was
+    # installed around compile(); None otherwise)
+    phase_alloc_mb: dict | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -61,8 +69,8 @@ class CompileReport:
 
 def partition_pass(g: SNNGraph, hw: HardwareConfig, *,
                    method: str = "framework", seed: int = 0,
-                   max_iters: int = 20000, restarts: int = 1
-                   ) -> PartitionResult:
+                   max_iters: int = 20000, restarts: int = 1,
+                   workers: int = 1) -> PartitionResult:
     """Synapse -> SPU assignment (paper §6.2, or a round-robin baseline).
 
     ``method`` names a registered
@@ -71,11 +79,14 @@ def partition_pass(g: SNNGraph, hw: HardwareConfig, *,
     ``restarts`` lockstep seeds, keeping the first feasible / best
     worst-SPU score); the :data:`repro.core.baselines.BASELINES` keys
     select those baselines. Unknown names raise ``ValueError`` listing
-    the registry.
+    the registry. ``workers > 1`` lets strategies with internal
+    candidate races (``multilevel`` coarse seeds) fan out over
+    processes; results are worker-count-invariant.
     """
     return get_strategy(method).partition(g, hw, seed=seed,
                                           max_iters=max_iters,
-                                          restarts=restarts)
+                                          restarts=restarts,
+                                          workers=workers)
 
 
 def search_pass(g: SNNGraph, hw: HardwareConfig,
@@ -112,13 +123,18 @@ def lower_pass(g: SNNGraph, tables: OpTables) -> LoweredProgram:
 
 
 def _spu_stats(g: SNNGraph, assign: np.ndarray, m: int):
-    syn = np.bincount(assign, minlength=m)
+    # unique (spu, value) pair counts — one np.unique per attribute
+    # instead of an M-pass boolean scan over the synapse list
+    syn = np.bincount(assign, minlength=m).astype(np.int64)
     posts = np.zeros(m, np.int64)
     weights = np.zeros(m, np.int64)
-    for i in range(m):
-        sel = assign == i
-        posts[i] = len(np.unique(g.post[sel]))
-        weights[i] = len(np.unique(g.weight[sel]))
+    a = assign.astype(np.int64)
+    for arr, out in ((g.post, posts), (g.weight, weights)):
+        vals, inv = np.unique(arr, return_inverse=True)
+        if not len(vals):
+            continue
+        pairs = np.unique(a * len(vals) + inv)
+        np.add.at(out, pairs // len(vals), 1)
     return syn, posts, weights
 
 
@@ -131,13 +147,13 @@ def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
                  schedule_depths: dict | None = None) -> CompileReport:
     """Assemble the :class:`CompileReport` for a finished pipeline run."""
     syn, posts, weights = _spu_stats(g, part.assign, hw.n_spus)
-    pkts = initialization_packets(g, tables, hw, routing=routing)
     return CompileReport(
         method=method, feasible=part.feasible, iterations=part.iterations,
         perturbations=part.perturbations, ot_depth=tables.depth,
         scores=part.scores, spu_synapse_counts=syn, spu_post_counts=posts,
         spu_weight_counts=weights, resources=resources(hw, tables.depth),
-        n_init_packets=len(pkts), compile_seconds=compile_seconds,
+        n_init_packets=n_initialization_packets(g, tables),
+        compile_seconds=compile_seconds,
         search=search,
         candidates_tried=len(search.candidates) if search else 1,
         schedule_method=schedule_method,
@@ -148,6 +164,27 @@ def build_report(g: SNNGraph, hw: HardwareConfig, tables: OpTables,
 # ---------------------------------------------------------------------------
 # Initialization stream of the compiled artifact.
 # ---------------------------------------------------------------------------
+
+def n_initialization_packets(g: SNNGraph, tables: OpTables) -> int:
+    """Length of :func:`initialization_packets` WITHOUT materializing the
+    (ctrl, payload) tuple list — at 10⁶ synapses the stream is millions
+    of entries and the report only needs its length. Closed form:
+    one select + ``n_neurons`` routing words, per SPU one select +
+    ``depth`` OT words + its used-weight words, one select +
+    ``n_internal`` Neuron Unit words (tests pin equality with the
+    materialized stream).
+    """
+    mask = tables.pre != NOP                      # [M, depth]
+    w = tables.weight.astype(np.int64)
+    span = int(w.max(initial=0)) - int(w.min(initial=0)) + 1
+    i_idx = np.nonzero(mask)[0]
+    keys = np.unique(i_idx * span + (w[mask] - int(w.min(initial=0))))
+    used_w = int(len(keys))
+    m = tables.n_spus
+    return (1 + g.n_neurons
+            + m * (1 + int(tables.depth)) + used_w
+            + 1 + (g.n_neurons - g.n_inputs))
+
 
 def initialization_packets(g: SNNGraph, tables: OpTables,
                            hw: HardwareConfig,

@@ -36,6 +36,7 @@ request without paying XLA.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import time
@@ -58,6 +59,7 @@ from repro.core.passes import (CompileReport, build_report,
                                initialization_packets, lower_pass,
                                partition_pass, schedule_pass, search_pass,
                                validate_pass)
+from repro.core.profiling import current_profiler, phase, profiled
 from repro.core.scheduling import LoweredProgram, OpTables
 from repro.snn.quantize import QuantizedSNN
 
@@ -66,7 +68,8 @@ PROGRAM_FORMAT_VERSION = 1
 # HardwareConfig fields added after format v1 shipped; serialized only at
 # non-default values (so old artifacts and new single-chip ones share the
 # same header schema, and v1 readers never see them)
-_POST_V1_HW_FIELDS = frozenset({"n_chips", "inter_chip_hop_cycles"})
+_POST_V1_HW_FIELDS = frozenset({"n_chips", "inter_chip_hop_cycles",
+                                "mesh_x", "mesh_y"})
 
 
 @dataclasses.dataclass
@@ -361,17 +364,27 @@ class Program:
         from repro.core.mapping.hypergraph import chip_span
         return chip_span(self.graph, self.tables.assign, self.hw)
 
+    def mesh_hops(self) -> np.ndarray:
+        """[n_neurons] 2D-mesh hop cost of each neuron's multicast under
+        this program's mapping (DESIGN.md §12; all zeros on a
+        single-chip hw)."""
+        from repro.core.mapping.hypergraph import mesh_hops
+        return mesh_hops(self.graph, self.tables.assign, self.hw)
+
     def inter_chip_counts(self, ext_spikes: np.ndarray,
                           spikes: np.ndarray) -> np.ndarray:
-        """Per-timestep inter-chip forwarded packets of a run — the
-        companion of the ``packet_counts`` stat, for
-        :meth:`profile`'s ``inter_chip_counts=``. ``ext_spikes`` and
-        ``spikes`` are the run's input and output spike trains
+        """Per-timestep inter-chip MESH HOPS of a run — the companion of
+        the ``packet_counts`` stat, for :meth:`profile`'s
+        ``inter_chip_counts=``. Each firing neuron charges the XY-mesh
+        bounding-box hop count of its multicast (:meth:`mesh_hops`), so
+        the cycle model's ``inter_chip_hop_cycles`` term scales with
+        actual mesh distance (DESIGN.md §12; on a two-chip chain this
+        is exactly the §11 ``span - 1`` forward count). ``ext_spikes``
+        and ``spikes`` are the run's input and output spike trains
         (``[T, n]`` or ``[B, T, n]``). All zeros when ``n_chips == 1``.
         """
-        from repro.core.mapping.hypergraph import inter_chip_packet_counts
-        return inter_chip_packet_counts(ext_spikes, spikes,
-                                        self.chip_span())
+        from repro.core.mapping.hypergraph import inter_chip_hop_counts
+        return inter_chip_hop_counts(ext_spikes, spikes, self.mesh_hops())
 
     # -- initialization stream ----------------------------------------------
 
@@ -433,6 +446,14 @@ class Program:
                 "schedule_depths": ({k: int(v) for k, v
                                      in rep.schedule_depths.items()}
                                     if rep.schedule_depths else None),
+                # phase profile keys are elided when absent so pre-§12
+                # artifacts keep their exact v1 header (golden roundtrip)
+                **({"phase_seconds": {k: float(v) for k, v
+                                      in rep.phase_seconds.items()}}
+                   if rep.phase_seconds else {}),
+                **({"phase_alloc_mb": {k: float(v) for k, v
+                                       in rep.phase_alloc_mb.items()}}
+                   if rep.phase_alloc_mb else {}),
             },
             "part": {
                 "feasible": bool(part.feasible),
@@ -514,7 +535,9 @@ class Program:
                     if rh.get("search") else None),
             candidates_tried=rh.get("candidates_tried", 1),
             schedule_method=rh.get("schedule_method", "slack"),
-            schedule_depths=rh.get("schedule_depths"))
+            schedule_depths=rh.get("schedule_depths"),
+            phase_seconds=rh.get("phase_seconds"),
+            phase_alloc_mb=rh.get("phase_alloc_mb"))
         # re-lower (pure, deterministic) — never re-partition
         lowered = lower_pass(g, tables)
         prog = cls(g, hw, tables, lowered, report, part,
@@ -535,17 +558,19 @@ class Program:
 def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
             method: str = "framework", engine: str = "jax", seed: int = 0,
             validate: bool = True, max_iters: int = 20000,
-            restarts: int = 1, schedule_method: str = "slack",
+            restarts: int = 1, workers: int = 1,
+            schedule_method: str = "slack",
             search: SearchConfig | None = None,
-            n_chips: int | None = None) -> Program:
+            n_chips: int | None = None,
+            profile_phases: bool = True) -> Program:
     """Compile an SNN (graph or quantized model) into a :class:`Program`.
 
     Runs the explicit pipeline partition -> schedule -> [validate] ->
     lower (see :mod:`repro.core.passes`) and wraps every product in the
     artifact. ``engine`` picks the default executor of
-    :meth:`Program.run`; ``method``/``seed``/``max_iters``/``restarts``
-    parameterize the partitioning pass, and ``schedule_method`` names
-    the registered
+    :meth:`Program.run`; ``method``/``seed``/``max_iters``/``restarts``/
+    ``workers`` parameterize the partitioning pass, and
+    ``schedule_method`` names the registered
     :class:`~repro.core.scheduling.ScheduleStrategy` ordering the post
     transmissions (``'slack'`` is the original scheduler).
 
@@ -565,6 +590,11 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     ``program.report.search``, the winning strategy on
     ``program.report.schedule_method``, and both survive
     ``save``/``load``.
+
+    ``profile_phases=True`` (the default) records a per-phase wall-time
+    breakdown of the pipeline onto ``report.phase_seconds`` (DESIGN.md
+    §12); wrap the call in ``profiled(PhaseProfiler(alloc=True))`` to
+    also capture per-phase allocation on ``report.phase_alloc_mb``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
@@ -581,35 +611,57 @@ def compile(g_or_qsnn: SNNGraph | QuantizedSNN, hw: HardwareConfig, *,
     trace = None
     tables = None
     schedule_depths = None
-    if search is not None:
-        if (method, seed, max_iters, restarts, schedule_method) != \
-                ("framework", 0, 20000, 1, "slack"):
-            raise ValueError(
-                "search= runs the joint portfolio and takes its parameters "
-                "from the SearchConfig; pass seed/max_iters/restarts there "
-                "instead of as compile() arguments (the portfolio explores "
-                "every registered schedule strategy, so schedule_method= "
-                "does not apply)")
-        part, trace, tables = search_pass(g, hw, search)
-        method = "portfolio"
-        if tables is not None:
-            sel = trace.selected
-            schedule_method = sel.schedule_method or "slack"
-            schedule_depths = sel.schedule_depths
+    # phase profiler (DESIGN.md §12): reuse a caller-installed profiler
+    # (``with profiled(PhaseProfiler(alloc=True)):``) so nested compiles
+    # accumulate into it; otherwise install a wall-clock-only one unless
+    # profiling is disabled.
+    prof = current_profiler()
+    ctx = (contextlib.nullcontext(prof)
+           if (prof is not None or not profile_phases) else profiled())
+    with ctx as prof:
+        if search is not None:
+            if (method, seed, max_iters, restarts, workers,
+                    schedule_method) != \
+                    ("framework", 0, 20000, 1, 1, "slack"):
+                raise ValueError(
+                    "search= runs the joint portfolio and takes its "
+                    "parameters from the SearchConfig; pass "
+                    "seed/max_iters/restarts/workers there instead of as "
+                    "compile() arguments (the portfolio explores every "
+                    "registered schedule strategy, so schedule_method= "
+                    "does not apply)")
+            with phase("partition"):
+                part, trace, tables = search_pass(g, hw, search)
+            method = "portfolio"
+            if tables is not None:
+                sel = trace.selected
+                schedule_method = sel.schedule_method or "slack"
+                schedule_depths = sel.schedule_depths
+            else:
+                schedule_method = "slack"  # infeasible winner: default
         else:
-            schedule_method = "slack"   # infeasible winner: default pipeline
-    else:
-        part = partition_pass(g, hw, method=method, seed=seed,
-                              max_iters=max_iters, restarts=restarts)
-    if tables is None:
-        tables = schedule_pass(g, part, hw, method=schedule_method)
-    if validate:
-        validate_pass(g, tables)
-    lowered = lower_pass(g, tables)
-    report = build_report(g, hw, tables, part, method=method,
-                          compile_seconds=time.time() - t0,
-                          routing=lowered.routing, search=trace,
-                          schedule_method=schedule_method,
-                          schedule_depths=schedule_depths)
+            with phase("partition"):
+                part = partition_pass(g, hw, method=method, seed=seed,
+                                      max_iters=max_iters,
+                                      restarts=restarts, workers=workers)
+        if tables is None:
+            with phase("schedule"):
+                tables = schedule_pass(g, part, hw, method=schedule_method)
+        if validate:
+            with phase("validate"):
+                validate_pass(g, tables)
+        with phase("lower"):
+            lowered = lower_pass(g, tables)
+        with phase("report"):
+            report = build_report(g, hw, tables, part, method=method,
+                                  compile_seconds=time.time() - t0,
+                                  routing=lowered.routing, search=trace,
+                                  schedule_method=schedule_method,
+                                  schedule_depths=schedule_depths)
+    if prof is not None:
+        report.phase_seconds = {k: float(v) for k, v in prof.seconds.items()}
+        if prof.alloc:
+            report.phase_alloc_mb = {k: float(v)
+                                     for k, v in prof.alloc_mb.items()}
     return Program(g, hw, tables, lowered, report, part,
                    default_engine=engine)

@@ -121,9 +121,14 @@ def synthetic_graph(n_synapses: int, *, topology: str = "layered",
 
 def scale_hw(g: SNNGraph, *, n_chips: int = 1, spus_per_chip: int = 16,
              concentration: int = 3, weight_bits: int = 6,
-             headroom: float = 1.3) -> HardwareConfig:
+             headroom: float = 1.3, mesh_x: int = 0,
+             mesh_y: int = 0) -> HardwareConfig:
     """A feasibility-plausible HardwareConfig for a synthetic graph: the
-    Eq. (9) depth is the balanced per-SPU usage estimate × headroom."""
+    Eq. (9) depth is the balanced per-SPU usage estimate × headroom.
+
+    ``mesh_x``/``mesh_y`` pin the 2D inter-chip mesh (DESIGN.md §12);
+    the (0, 0) default keeps the near-square auto factorization.
+    """
     m = n_chips * spus_per_chip
     nw = len(np.unique(g.weight))
     per_spu = (-(-g.n_internal // m) + -(-(nw + 1) // concentration))
@@ -131,4 +136,5 @@ def scale_hw(g: SNNGraph, *, n_chips: int = 1, spus_per_chip: int = 16,
         n_spus=m, unified_mem_depth=int(np.ceil(per_spu * headroom)),
         concentration=concentration, weight_bits=weight_bits,
         potential_bits=18, max_neurons=g.n_neurons,
-        max_post_neurons=g.n_internal, n_chips=n_chips)
+        max_post_neurons=g.n_internal, n_chips=n_chips,
+        mesh_x=mesh_x, mesh_y=mesh_y)

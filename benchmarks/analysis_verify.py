@@ -1,0 +1,58 @@
+"""Static-verifier throughput: ``Program.verify()`` wall time.
+
+The verifier is the gate between "artifact on disk" and "artifact in
+the serving registry" (``ProgramRegistry.register(verify=True)``), so
+its wall time is a serving-control-plane latency. Two rows per shape:
+
+* ``analysis.verify.golden.*``  — the pinned tiny golden artifact
+  (the CI load-path floor);
+* ``analysis.verify.shd.*``     — the paper's fig13 SHD instance
+  shape (~33k synapses, 16 SPUs), compiled with the fast hypergraph
+  mapper. The acceptance bound is wall < 1 s — verification must stay
+  negligible next to the compile it guards.
+
+Both rows assert zero diagnostics: a verifier that flags its own
+compiler's output is a correctness failure, not a perf number.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.core import Program, compile as compile_program
+
+from benchmarks.partitioner_throughput import fig13_shd_instance
+
+GOLDEN = Path(__file__).parent.parent / "tests" / "golden" / \
+    "tiny_program_v1.npz"
+
+
+def _verify_rows(tag: str, program, budget_ms: float | None):
+    best = float("inf")
+    rep = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        rep = program.verify()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    assert rep is not None and rep.ok, \
+        f"verifier flagged a clean compile ({tag}): {rep.summary()}"
+    if budget_ms is not None:
+        assert best < budget_ms, \
+            f"{tag} verify took {best:.1f} ms (budget {budget_ms} ms)"
+    return [
+        (f"analysis.verify.{tag}.diagnostics", len(rep.diagnostics),
+         "count (must be 0)"),
+        (f"analysis.verify.{tag}.wall_ms", round(best, 3),
+         "best-of-3 full verify() wall"),
+    ]
+
+
+def run(quick: bool = False):
+    rows = _verify_rows("golden", Program.load(GOLDEN), budget_ms=None)
+
+    g, hw = fig13_shd_instance()
+    p = compile_program(g, hw, method="hypergraph")
+    # acceptance bound: < 1 s on the SHD-shape artifact
+    rows += _verify_rows("shd", p, budget_ms=1000.0)
+    rows.append(("analysis.verify.shd.n_synapses", g.n_synapses, "shape"))
+    return rows

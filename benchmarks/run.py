@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.scheduler_throughput",    # scheduling-subsystem speedup
     "benchmarks.serving_throughput",      # serving-subsystem smoke
     "benchmarks.compiler_scale",          # mapping-at-scale subsystem
+    "benchmarks.analysis_verify",         # static-verifier wall time
     "benchmarks.roofline_table",          # §Roofline aggregation
 ]
 
@@ -38,7 +39,8 @@ SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
                  "benchmarks.partitioner_throughput",
                  "benchmarks.scheduler_throughput",
                  "benchmarks.serving_throughput",
-                 "benchmarks.compiler_scale"]
+                 "benchmarks.compiler_scale",
+                 "benchmarks.analysis_verify"]
 
 
 def main() -> None:

@@ -125,6 +125,16 @@ def scores_from_assignment(weights: np.ndarray, posts: np.ndarray,
             - (-(-(uq + 1) // hw.concentration) + up))
 
 
+def usage_from_assignment(weights: np.ndarray, posts: np.ndarray,
+                          assign: np.ndarray, hw: HardwareConfig
+                          ) -> np.ndarray:
+    """Vectorized per-SPU memory-line usage (LHS of Eq. 9) for a
+    synapse->SPU assignment; ``scores_from_assignment`` is
+    ``unified_mem_depth - usage`` elementwise."""
+    return hw.unified_mem_depth - scores_from_assignment(weights, posts,
+                                                         assign, hw)
+
+
 def total_memory_bits(hw: HardwareConfig, op_table_depth: int) -> int:
     """Eq. (11): routing + M*(OT + UM + Spike Memory) + Neuron State SRAM.
 

@@ -29,7 +29,7 @@ from repro.core.mapping.search import (SearchConfig, SearchTrace,
 from repro.core.mapping.strategies import get_strategy
 from repro.core.memory_model import HardwareConfig
 from repro.core.scheduling import (NOP, LoweredProgram, OpTables,
-                                   lower_tables, schedule, validate_schedule)
+                                   lower_tables, schedule)
 
 
 @dataclasses.dataclass
@@ -113,8 +113,17 @@ def schedule_pass(g: SNNGraph, part: PartitionResult | np.ndarray,
 
 
 def validate_pass(g: SNNGraph, tables: OpTables) -> None:
-    """Schedule legality checks; raises AssertionError on violation."""
-    validate_schedule(g, tables)
+    """Schedule legality checks; raises AssertionError on violation.
+
+    Routed through the static-analysis framework (DESIGN.md §13): the
+    hazard detector of :mod:`repro.analysis.schedule` computes ALL
+    structured diagnostics and the legacy shim raises the
+    highest-priority one with the historical message.
+    ``Program.verify()`` exposes the full diagnostic list plus the
+    range/memory checkers over a finished artifact.
+    """
+    from repro.analysis.schedule import check_schedule, raise_legacy
+    raise_legacy(check_schedule(g, tables))
 
 
 def lower_pass(g: SNNGraph, tables: OpTables) -> LoweredProgram:

@@ -386,6 +386,21 @@ class Program:
         from repro.core.mapping.hypergraph import inter_chip_hop_counts
         return inter_chip_hop_counts(ext_spikes, spikes, self.mesh_hops())
 
+    # -- static verification (DESIGN.md §13) ----------------------------------
+
+    def verify(self, checkers: "list[str] | None" = None):
+        """Statically verify the artifact WITHOUT executing any engine.
+
+        Runs the registered analysis checkers of
+        :mod:`repro.analysis` — schedule hazards, integer range
+        analysis, Eq. 9/11 memory audit — and returns their
+        :class:`~repro.analysis.diagnostics.VerifyReport`
+        (``report.ok`` iff no ERROR diagnostic). The CLI form is
+        ``python -m repro.analysis.verify artifact.npz``.
+        """
+        from repro.analysis import verify as _verify
+        return _verify(self, checkers=checkers)
+
     # -- initialization stream ----------------------------------------------
 
     def init_packets(self) -> list[tuple[int, int]]:

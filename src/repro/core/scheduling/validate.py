@@ -1,85 +1,30 @@
-"""Schedule legality checks (DESIGN.md §7.3)."""
+"""Schedule legality checks (DESIGN.md §7.3) — compat shim.
+
+The actual analysis lives in :mod:`repro.analysis.schedule` (the
+schedule hazard detector of the static artifact verifier, DESIGN.md
+§13): it re-derives send-slot occupancy from the raw tables and emits
+structured :class:`~repro.analysis.diagnostics.Diagnostic` records
+naming the offending (post, SPU, slot) — including hazards the old
+bare asserts never covered (send-slot collisions, malformed NOP
+slots).
+
+:func:`validate_schedule` keeps the historical raise-on-violation
+contract: it runs the detector and raises ``AssertionError`` with the
+EXACT legacy message of the highest-priority violation
+(``tests/test_scheduling.py`` / ``tests/test_mapping.py`` pin those
+messages), so every pre-framework caller keeps working unchanged.
+"""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.graph import SNNGraph
-from repro.core.scheduling.tables import NOP, OpTables
+from repro.core.scheduling.tables import OpTables
 
 
 def validate_schedule(g: SNNGraph, tables: OpTables) -> None:
-    """Legality checks (DESIGN.md §7.3): raises AssertionError on violation.
-
-    All four invariants are numpy mask/lexsort expressions over the
-    ``[M, depth]`` tables — no Python loop over slots — so validation
-    stays a negligible slice of compile time at large OT depths.
-    Messages keep the original loop-based wording, with two deliberate
-    repairs: invariant (b) reads the expected slot through the dense
-    table (a post missing from ``send_slot`` reports slot -1 instead of
-    KeyError-ing inside the f-string), and invariant (c) names the
-    offending (post, SPU, slot) instead of asserting bare.
-    """
-    valid = tables.pre != NOP
-    spu_i, slot_i = np.nonzero(valid)           # row-major: (spu, t) order
-    pre_v = tables.pre[spu_i, slot_i]
-    post_v = tables.post[spu_i, slot_i]
-    w_v = tables.weight[spu_i, slot_i]
-
-    # (a) every synapse appears exactly once
-    n_placed = int(valid.sum())
-    assert n_placed == g.n_synapses, \
-        f"{n_placed} ops != {g.n_synapses} synapses"
-    have = np.lexsort((w_v, post_v, pre_v))
-    want = np.lexsort((g.weight, g.post, g.pre))
-    assert (np.array_equal(pre_v[have], g.pre[want])
-            and np.array_equal(post_v[have], g.post[want])
-            and np.array_equal(w_v[have], g.weight[want])), \
-        "op multiset != synapse multiset"
-
-    # send slot per post as a dense lookup table
-    n = g.n_neurons
-    ss = np.full(n, -1, np.int64)
-    for pq, t in tables.send_slot.items():
-        ss[pq] = t
-
-    # (b) merge alignment: all post_end slots of post p identical across SPUs
-    pe_spu, pe_slot = np.nonzero(tables.post_end)
-    pe_post = tables.post[pe_spu, pe_slot]
-    bad = ss[pe_post] != pe_slot
-    if bad.any():
-        i = int(np.argmax(bad))                 # first violation, (spu, t)
-        # report the expected slot through the dense table: a post with
-        # no send_slot entry at all reads as -1 instead of KeyError-ing
-        # inside the message formatting
-        raise AssertionError(
-            f"post {int(pe_post[i])} sent at {int(pe_slot[i])} "
-            f"!= slot {int(ss[int(pe_post[i])])}")
-    # exactly one post_end per (spu, post with synapses there)
-    pe_key = pe_spu * n + pe_post
-    assert len(np.unique(pe_key)) == len(pe_key), \
-        "duplicate post_end in one SPU"
-    assert np.array_equal(np.unique(pe_key), np.unique(spu_i * n + post_v)), \
-        "missing post_end"
-
-    # (c) all ops of (spu, post) at slots <= send slot
-    late = slot_i > ss[post_v]
-    if late.any():
-        i = int(np.argmax(late))
-        raise AssertionError(
-            f"op of post {int(post_v[i])} on SPU {int(spu_i[i])} at slot "
-            f"{int(slot_i[i])} after its send slot {int(ss[post_v[i]])}")
-
-    # (d) pre_end exactly on last reference per (spu, pre)
-    key = spu_i * n + pre_v
-    order = np.lexsort((slot_i, key))
-    k_sorted, s_sorted = key[order], slot_i[order]
-    is_last = np.r_[k_sorted[1:] != k_sorted[:-1], np.ones(min(len(key), 1),
-                                                           bool)]
-    fe_spu, fe_slot = np.nonzero(tables.pre_end)
-    fkey = fe_spu * n + tables.pre[fe_spu, fe_slot]
-    forder = np.lexsort((fe_slot, fkey))
-    fk, fs = fkey[forder], fe_slot[forder]
-    f_last = np.r_[fk[1:] != fk[:-1], np.ones(min(len(fk), 1), bool)]
-    assert (np.array_equal(fk[f_last], k_sorted[is_last])
-            and np.array_equal(fs[f_last], s_sorted[is_last])), \
-        "pre_end flags wrong"
+    """Legality checks: raises AssertionError on the first violation
+    (legacy check order and message format); use
+    :func:`repro.analysis.schedule.check_schedule` for the full
+    structured diagnostic list."""
+    # lazy: repro.analysis sits above the scheduling layer
+    from repro.analysis.schedule import check_schedule, raise_legacy
+    raise_legacy(check_schedule(g, tables))

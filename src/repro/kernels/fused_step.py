@@ -53,6 +53,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.ranges import dense_plane_bounds, min_safe_dtype
 from repro.snn.lif import LIFIntParams
 
 DEFAULT_BLOCK = (8, 128, 128)           # (batch, post, pre) tile
@@ -66,10 +67,18 @@ MAX_DENSE_BYTES = int(os.environ.get("SUPRASNN_FUSED_MAX_BYTES",
 
 @dataclasses.dataclass(frozen=True)
 class DenseSynapses:
-    """The lowered op stream as a packed dense weight plane."""
+    """The lowered op stream as a packed dense weight plane.
+
+    ``value_min``/``value_max`` are the PROVEN bounds of the folded
+    plane (min/max after summing duplicate (pre, post) ops) — the
+    facts the range analyzer (:mod:`repro.analysis.ranges`) consumes
+    directly instead of re-scanning the dense array.
+    """
     weight: np.ndarray                  # [n_neurons, n_internal], int8/16/32
     n_neurons: int
     n_internal: int
+    value_min: int = 0                  # exact folded-plane bounds
+    value_max: int = 0
 
     @property
     def dtype(self) -> np.dtype:
@@ -83,21 +92,27 @@ def pack_dense(lowered) -> DenseSynapses:
     narrowest signed dtype holding every SUMMED entry — the packing
     check runs on the dense plane, not the raw weights, so two int8
     synapses folding into a >int8 entry still pack correctly wider.
+    The folded bounds (and the dtype choice they imply) are computed
+    by the static range analyzer BEFORE any densification, so the
+    size-guard message can already name the dtype the plane would use.
     """
     n, m = lowered.n_neurons, lowered.n_internal
+    lo, hi = dense_plane_bounds(lowered.op_pre, lowered.op_post_local,
+                                lowered.op_weight, n, m)
     if n * m * 4 > MAX_DENSE_BYTES:
         raise ValueError(
             f"fused kernel tier would densify {n}x{m} weights "
-            f"(> {MAX_DENSE_BYTES} bytes); use kernel='lif' for this "
-            f"graph or raise SUPRASNN_FUSED_MAX_BYTES")
+            f"(> {MAX_DENSE_BYTES} bytes; plane values in [{lo}, {hi}], "
+            f"minimal safe dtype {min_safe_dtype(lo, hi)}); use "
+            f"kernel='lif' for this graph or raise "
+            f"SUPRASNN_FUSED_MAX_BYTES")
     w = np.zeros((n, m), np.int32)
     np.add.at(w, (lowered.op_pre, lowered.op_post_local), lowered.op_weight)
-    for dt in (np.int8, np.int16):
-        info = np.iinfo(dt)
-        if info.min <= w.min() and w.max() <= info.max:
-            w = w.astype(dt)
-            break
-    return DenseSynapses(weight=w, n_neurons=n, n_internal=m)
+    dt = np.dtype(min_safe_dtype(lo, hi))
+    if dt.itemsize < 4:                 # int8/int16; int32 already holds it
+        w = w.astype(dt)
+    return DenseSynapses(weight=w, n_neurons=n, n_internal=m,
+                         value_min=lo, value_max=hi)
 
 
 # ---------------------------------------------------------------------------

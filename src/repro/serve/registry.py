@@ -35,18 +35,31 @@ class ProgramRegistry:
 
     def register(self, name: str, program: Program, *, precompile=None,
                  timesteps: int | None = None,
-                 spec: ExecutionSpec | None = None) -> Program:
+                 spec: ExecutionSpec | None = None,
+                 verify: bool = False) -> Program:
         """Register a loaded program; duplicate names are rejected.
 
         ``precompile=`` AOT-compiles the given batch buckets (padded
         shapes, ``timesteps`` fixing the T axis) for ``spec`` at
         insert time — see :meth:`Program.precompile`.
+
+        ``verify=True`` statically verifies the artifact first
+        (:meth:`Program.verify`, DESIGN.md §13) and rejects it with
+        ``ValueError`` listing the diagnostics if any checker reports
+        an ERROR — the "safe to serve" gate, run before any AOT work.
         """
         if not name:
             raise ValueError("model name must be non-empty")
         if name in self._programs:
             raise ValueError(f"model {name!r} already registered; "
                              "unregister it first to replace")
+        if verify:
+            report = program.verify()
+            if not report.ok:
+                raise ValueError(
+                    f"model {name!r} failed static verification with "
+                    f"{len(report.errors)} error(s):\n"
+                    + "\n".join(f"  {d}" for d in report.errors))
         if precompile is not None:
             if timesteps is None:
                 raise ValueError("register(precompile=...) needs timesteps= "
@@ -57,13 +70,15 @@ class ProgramRegistry:
 
     def load(self, name: str, path: str | Path, *, precompile=None,
              timesteps: int | None = None,
-             spec: ExecutionSpec | None = None) -> Program:
+             spec: ExecutionSpec | None = None,
+             verify: bool = False) -> Program:
         """``Program.load`` an artifact and register it under ``name``
-        (AOT-precompiling the serving shapes when ``precompile=`` is
+        (statically verifying first when ``verify=True``,
+        AOT-precompiling the serving shapes when ``precompile=`` is
         given)."""
         return self.register(name, Program.load(path),
                              precompile=precompile, timesteps=timesteps,
-                             spec=spec)
+                             spec=spec, verify=verify)
 
     def unregister(self, name: str) -> Program:
         if name not in self._programs:

@@ -1,0 +1,42 @@
+"""Hypothesis property: ``Program.verify()`` is clean on EVERY
+``compile()`` output — any graph shape, any mapping strategy, any
+schedule strategy. A diagnostic on a freshly-compiled program would be
+a false positive of the static verifier (or a real compiler bug);
+either way the property must fail."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import compile, random_graph
+from repro.core.graph import SNNGraph
+
+from conftest import make_hw
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_inputs=st.integers(2, 12), n_internal=st.integers(4, 14),
+       density=st.floats(0.2, 0.9),
+       method=st.sampled_from(["framework", "synapse_rr", "hypergraph"]),
+       schedule_method=st.sampled_from(["slack", "consecutive",
+                                        "load_balance"]),
+       feedforward=st.booleans())
+def test_verify_clean_on_random_compiles(seed, n_inputs, n_internal,
+                                         density, method, schedule_method,
+                                         feedforward):
+    n_syn = max(4, int(density * (n_inputs + n_internal) * n_internal))
+    g = random_graph(n_inputs, n_internal, n_syn, seed=seed)
+    if feedforward:
+        ff = g.pre < n_inputs
+        if ff.sum() < 2:
+            return
+        g = SNNGraph(g.n_inputs, g.n_neurons, g.pre[ff], g.post[ff],
+                     g.weight[ff], g.lif, g.output_slice)
+    p = compile(g, make_hw(g), method=method,
+                schedule_method=schedule_method)
+    rep = p.verify()
+    assert rep.ok and not rep.diagnostics, rep.summary()

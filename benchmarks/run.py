@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.partitioner_throughput",  # mapping-subsystem speedup
     "benchmarks.scheduler_throughput",    # scheduling-subsystem speedup
     "benchmarks.serving_throughput",      # serving-subsystem smoke
+    "benchmarks.serving_soak",            # sustained-load trace replay
     "benchmarks.compiler_scale",          # mapping-at-scale subsystem
     "benchmarks.analysis_verify",         # static-verifier wall time
     "benchmarks.roofline_table",          # §Roofline aggregation
@@ -39,6 +40,7 @@ SMOKE_MODULES = ["benchmarks.kernel_benchmarks",
                  "benchmarks.partitioner_throughput",
                  "benchmarks.scheduler_throughput",
                  "benchmarks.serving_throughput",
+                 "benchmarks.serving_soak",
                  "benchmarks.compiler_scale",
                  "benchmarks.analysis_verify"]
 

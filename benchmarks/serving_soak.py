@@ -1,0 +1,137 @@
+"""Serving soak benchmark: sustained trace replay under load.
+
+Pure simulation — no jax import, no engine — so the rows are
+bit-deterministic and cheap enough for CI. Two scenarios share one
+deterministic seed:
+
+* **steady**: Poisson arrivals at ~60% of engine capacity with a
+  batch-hold window — the nominal operating point. Expect zero shed
+  and a p99 inside the SLO.
+* **burst**: on/off bursty arrivals whose peaks exceed capacity,
+  against a bounded queue (``max_queue``) with ``reject`` shedding and
+  a dispatch deadline — the overload point. Expect a nonzero but
+  *bounded* shed fraction, and every served request still inside its
+  deadline.
+* **deadline**: the same bursty shape against an *unbounded* queue
+  with only a dispatch deadline — overload shows up as deadline
+  sheds (bounded, burst-tail sized) instead of queue-full rejections.
+
+Rows (land in BENCH_smoke.json via ``benchmarks.run --smoke``):
+
+* ``serve.soak.sim_seconds``         — simulated seconds replayed
+  (acceptance floor: >= 60)
+* ``serve.soak.requests``            — total offered requests
+* ``serve.soak.offered_qps``         — offered load over both traces
+* ``serve.soak.p50_ms`` / ``serve.soak.p99_ms`` — served-request
+  latency percentiles across both scenarios
+* ``serve.soak.shed_frac``           — shed fraction (burst scenario
+  sheds; steady does not)
+* ``serve.soak.deadline_miss_frac``  — deadline sheds / offered
+* ``serve.soak.deterministic``       — 1.0 iff a second same-seed
+  replay reproduces identical served counts, shed counts and
+  bit-identical latencies
+* ``serve.soak.slo_ok``              — 1.0 iff the per-scenario
+  ``assert_slo`` bars pass (steady: p99 <= 2 ms, no shed; burst:
+  p99 <= 25 ms, shed <= 25%)
+* ``serve.stage.queue_us`` / ``fill_us`` / ``pad_us`` /
+  ``compute_us``                     — mean per-stage latency over all
+  served requests
+* ``serve.stage.sum_exact``          — 1.0 iff per-request stages sum
+  bit-exactly to ``latencies_us`` everywhere
+"""
+from __future__ import annotations
+
+SEED = 2026
+SLO = {"steady": dict(slo_p99_ms=2.0, max_shed_frac=0.0),
+       "burst": dict(slo_p99_ms=25.0, max_shed_frac=0.25),
+       "deadline": dict(slo_p99_ms=10.0, max_shed_frac=0.25,
+                        max_deadline_miss_frac=0.25)}
+
+
+def _scenarios(duration_s: float):
+    from repro.serve.batcher import BatchPolicy, linear_service_model
+    from repro.serve.replay import ArrivalTrace
+
+    # capacity under this model: bucket 8 costs 400 us -> 20k req/s
+    service = linear_service_model(200.0, 25.0)
+    steady = (
+        ArrivalTrace.poisson(12_000.0, duration_s, seed=SEED, n_streams=8),
+        BatchPolicy(max_batch=8, max_wait_us=300.0),
+    )
+    burst = (
+        ArrivalTrace.bursty(4_000.0, duration_s, seed=SEED + 1,
+                            n_streams=8, burst_factor=6.0,
+                            period_s=0.5, duty=0.15),
+        BatchPolicy(max_batch=8, max_wait_us=200.0, max_queue=64,
+                    deadline_us=20_000.0, shed="reject"),
+    )
+    deadline = (
+        ArrivalTrace.bursty(4_000.0, duration_s, seed=SEED + 2,
+                            n_streams=8, burst_factor=6.0,
+                            period_s=0.5, duty=0.15),
+        BatchPolicy(max_batch=8, max_wait_us=200.0, deadline_us=5_000.0),
+    )
+    return service, {"steady": steady, "burst": burst,
+                     "deadline": deadline}
+
+
+def _replay_all(duration_s: float):
+    from repro.serve.replay import replay
+    service, scen = _scenarios(duration_s)
+    return {name: replay(trace, policy, service)
+            for name, (trace, policy) in scen.items()}
+
+
+def run(quick: bool = False) -> list[tuple]:
+    # the acceptance floor is 60 simulated seconds even in --quick;
+    # the full run soaks longer to surface slow queue drift
+    duration_s = 60.0 if quick else 180.0
+    reports = _replay_all(duration_s)
+    reports2 = _replay_all(duration_s)
+    deterministic = all(
+        reports[k].fingerprint() == reports2[k].fingerprint()
+        for k in reports)
+    slo_ok = all(not rep.check(**SLO[name])
+                 for name, rep in reports.items())
+
+    requests = sum(r.requests for r in reports.values())
+    served = sum(r.served for r in reports.values())
+    shed = requests - served
+    dl = sum(r.shed["deadline"] for r in reports.values())
+    lat_ms = []
+    for r in reports.values():
+        for res in r.results.values():
+            lat_ms.append(res.latencies_us[res.served] / 1e3)
+    import numpy as np
+    lat_ms = np.concatenate(lat_ms)
+    p50, p99 = np.percentile(lat_ms, [50, 99])
+    stages = {k: sum(r.stages_us[k] * r.served for r in reports.values())
+              / max(served, 1)
+              for k in ("queue_wait", "batch_fill", "pad", "compute")}
+    sum_exact = all(r.stage_sum_exact for r in reports.values())
+
+    return [
+        ("serve.soak.sim_seconds", duration_s, ""),
+        ("serve.soak.requests", requests, ""),
+        ("serve.soak.offered_qps",
+         round(requests / duration_s, 1), ""),
+        ("serve.soak.p50_ms", round(float(p50), 4), ""),
+        ("serve.soak.p99_ms", round(float(p99), 4), ""),
+        ("serve.soak.shed_frac", round(shed / requests, 5), ""),
+        ("serve.soak.deadline_miss_frac", round(dl / requests, 5), ""),
+        ("serve.soak.deterministic", float(deterministic),
+         "same seed => identical latencies/shed"),
+        ("serve.soak.slo_ok", float(slo_ok),
+         "per-scenario p99 + shed bars"),
+        ("serve.stage.queue_us", round(stages["queue_wait"], 3), ""),
+        ("serve.stage.fill_us", round(stages["batch_fill"], 3), ""),
+        ("serve.stage.pad_us", round(stages["pad"], 3), ""),
+        ("serve.stage.compute_us", round(stages["compute"], 3), ""),
+        ("serve.stage.sum_exact", float(sum_exact),
+         "stages sum bit-exactly to latency"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(*row, sep=",")

@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python examples/serve_snn.py [--artifact PATH]
         [--requests 64] [--batch-max 8] [--max-wait-us 0]
-        [--arrival-us 300] [--seed 0] [--sharded] [--measured]
+        [--max-queue 0] [--deadline-us 0] [--shed reject]
+        [--trace PATH.npz] [--arrival-us 300] [--seed 0]
+        [--sharded] [--measured]
 
 One process compiles (partition + schedule, the expensive stochastic
 part) and saves the artifact; every serving process just `Program.load`s
@@ -18,6 +20,14 @@ deterministic linear model — so two runs with the same seed report
 identical p50/p99 (asserted in tests/test_serving.py). `--measured`
 swaps in real wall-clock engine times; `--sharded` runs each batch
 data-parallel over every jax device (`repro.serve.sharded`).
+
+Overload knobs map straight onto `BatchPolicy`: `--max-queue` bounds
+the waiting queue, `--deadline-us` sets the per-request dispatch
+deadline, `--shed` picks reject / drop-oldest /
+degrade-to-smaller-bucket. `--trace` replays a recorded
+`repro.serve.replay.ArrivalTrace` (.npz) instead of the synthetic
+Poisson arrivals; shed and per-stage accounting are printed whenever
+a policy can shed.
 """
 from __future__ import annotations
 
@@ -28,8 +38,8 @@ import numpy as np
 
 from repro.core import (ExecutionSpec, HardwareConfig, Program, compile,
                         random_graph)
-from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
-                         linear_service_model)
+from repro.serve import (ArrivalTrace, BatchPolicy, MicroBatcher,
+                         ProgramRegistry, linear_service_model)
 
 
 def build_artifact(path: Path) -> Path:
@@ -59,12 +69,23 @@ def run_demo(args) -> dict:
 
     # ONE generator drives both the spike trains and the arrival process
     rng = np.random.default_rng(args.seed)
-    reqs = (rng.random((args.requests, args.timesteps, program.n_inputs))
+    if args.trace:
+        trace = ArrivalTrace.load(args.trace)
+        arrivals = trace.arrivals_us
+        n_req = trace.n_requests
+        print(f"replaying {trace.kind} trace: {n_req} requests over "
+              f"{trace.duration_s:.1f}s ({trace.offered_qps:.0f} qps)")
+    else:
+        n_req = args.requests
+        arrivals = np.cumsum(rng.exponential(args.arrival_us, n_req))
+    reqs = (rng.random((n_req, args.timesteps, program.n_inputs))
             < 0.25).astype(np.int32)
-    arrivals = np.cumsum(rng.exponential(args.arrival_us, args.requests))
 
     policy = BatchPolicy(max_batch=args.batch_max,
-                         max_wait_us=args.max_wait_us)
+                         max_wait_us=args.max_wait_us,
+                         max_queue=args.max_queue,
+                         deadline_us=args.deadline_us,
+                         shed=args.shed)
     spec = ExecutionSpec(mesh="auto") if args.sharded else None
     runner = registry.runner("demo", spec)
     batcher = MicroBatcher(
@@ -76,6 +97,13 @@ def run_demo(args) -> dict:
           f"buckets {dict(sorted(m['buckets'].items()))}")
     print(f"latency p50 {m['p50_ms']:.2f} ms  p99 {m['p99_ms']:.2f} ms  "
           f"throughput {m['throughput_rps']:.0f} req/s")
+    if policy.max_queue or policy.deadline_us:
+        st = m["stages_us"]
+        print(f"shed {m['shed']} ({m['shed_frac']:.1%}), "
+              f"{m['degraded_batches']} degraded batches")
+        print(f"stages (us): queue {st['queue_wait']:.1f}  "
+              f"fill {st['batch_fill']:.1f}  pad {st['pad']:.1f}  "
+              f"compute {st['compute']:.1f}")
     return m
 
 
@@ -85,6 +113,19 @@ def main(argv=None) -> dict:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch-max", type=int, default=8)
     ap.add_argument("--max-wait-us", type=float, default=0.0)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the waiting queue (0 = unbounded); "
+                         "overflow is handled by --shed")
+    ap.add_argument("--deadline-us", type=float, default=0.0,
+                    help="per-request dispatch deadline from arrival "
+                         "(0 = none); late requests are shed, not late")
+    ap.add_argument("--shed", default="reject",
+                    choices=["reject", "drop-oldest", "degrade",
+                             "degrade-to-smaller-bucket"],
+                    help="overload policy when the queue is full")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a saved ArrivalTrace .npz instead of "
+                         "synthetic Poisson arrivals")
     ap.add_argument("--timesteps", type=int, default=20)
     ap.add_argument("--arrival-us", type=float, default=300.0,
                     help="mean Poisson inter-arrival time")

@@ -1,21 +1,37 @@
 # SupraSNN serving subsystem: a loaded Program artifact as a
-# first-class, multi-device service.
-#   sharded    shard_map data parallelism over a jax mesh (pad-and-mask
-#              ragged batches; bit-exact vs the single-device engine)
-#   batcher    deterministic micro-batcher (simulated clock, BatchPolicy,
-#              pow2 buckets, per-request latency accounting)
-#   registry   N loaded Programs by name, per-model engine ownership
-#   server     request streams -> per-model queues -> metrics dict
+# first-class, multi-device, real-time service.
+#   sharded      shard_map data parallelism over a jax mesh (pad-and-mask
+#                ragged batches; bit-exact vs the single-device engine)
+#   batcher      deterministic micro-batcher (simulated clock, BatchPolicy
+#                with bounded queues / shedding / deadlines, pow2 buckets,
+#                bit-exact per-stage latency decomposition)
+#   registry     N loaded Programs by name, per-model engine + policy
+#   server       request streams -> per-model queues -> metrics dict on an
+#                explicit shared / per-engine timeline
+#   async_server asyncio front-end: bounded queues, admission control,
+#                backpressure as raised exceptions, real clock
+#   replay       arrival-trace soak harness (Poisson / bursty generators,
+#                deterministic SLO assertions)
+from repro.serve.async_server import (AsyncServer, CompletedRequest,
+                                      DeadlineMissError, QueueFullError,
+                                      ShedError)
 from repro.serve.batcher import (BatchPolicy, BatchRecord, DrainResult,
-                                 MicroBatcher, latency_metrics,
+                                 MicroBatcher, SHED_DEADLINE, SHED_NONE,
+                                 SHED_QUEUE_FULL, SHED_REASONS, ShedEvent,
+                                 drain_together, latency_metrics,
                                  linear_service_model)
 from repro.serve.registry import ProgramRegistry
+from repro.serve.replay import ArrivalTrace, SoakReport, replay
 from repro.serve.server import Request, Server
 from repro.serve.sharded import ShardedRunner, sharded_runner
 
 __all__ = [
-    "BatchPolicy", "BatchRecord", "DrainResult", "MicroBatcher",
-    "latency_metrics", "linear_service_model",
-    "ProgramRegistry", "Request", "Server",
-    "ShardedRunner", "sharded_runner",
+    "ArrivalTrace", "AsyncServer",
+    "BatchPolicy", "BatchRecord", "CompletedRequest",
+    "DeadlineMissError", "DrainResult", "MicroBatcher",
+    "ProgramRegistry", "QueueFullError", "Request",
+    "SHED_DEADLINE", "SHED_NONE", "SHED_QUEUE_FULL", "SHED_REASONS",
+    "Server", "ShardedRunner", "ShedError", "ShedEvent", "SoakReport",
+    "drain_together", "latency_metrics", "linear_service_model",
+    "replay", "sharded_runner",
 ]

@@ -1,17 +1,17 @@
-"""Library micro-batcher: the queue / pow2-bucket / drain logic that
-used to live as demo code inside ``examples/serve_snn.py``.
+"""Library micro-batcher: queue / pow2-bucket / drain logic plus the
+real-time policies (bounded queues, shedding, deadlines) layered on it.
 
-The batcher is a *deterministic simulation* of a single-threaded
-serving loop. Time is a simulated microsecond clock — arrivals come
-from the caller, service times come from an explicit ``service_model``
-(or, when none is given, from measuring the real engine call) — so
-identical inputs always produce identical per-request latencies, which
-is what makes the queue semantics property-testable.
+The batcher is a *deterministic simulation* of a serving loop. Time is
+a simulated microsecond clock — arrivals come from the caller, service
+times come from an explicit ``service_model`` (or, when none is given,
+from measuring the real engine call) — so identical inputs always
+produce identical per-request latencies, which is what makes the queue
+semantics property-testable.
 
 Semantics (:class:`BatchPolicy`):
 
-* requests are served strictly FIFO — a batch is always a contiguous
-  run of the arrival-ordered queue;
+* requests are served strictly FIFO — a batch is always the oldest
+  still-queued run of the arrival-ordered queue;
 * a batch **dispatches** when it is full (``max_batch`` requests) or
   when the oldest queued request has waited ``max_wait_us`` (with
   ``max_wait_us=0`` the batcher drains whatever has arrived, the
@@ -22,31 +22,89 @@ Semantics (:class:`BatchPolicy`):
 * the engine is serially busy: the next batch cannot dispatch before
   the previous one completes.
 
+Overload semantics (all default OFF, preserving the original
+unbounded-queue behavior bit-exactly):
+
+* ``max_queue > 0`` bounds the number of *waiting* requests. An
+  arrival that finds the queue full is handled by the ``shed`` policy:
+  ``"reject"`` sheds the arriving request, ``"drop-oldest"`` sheds the
+  head of the queue and admits the arrival, ``"degrade"`` (alias
+  ``"degrade-to-smaller-bucket"``) never sheds — while the backlog
+  exceeds ``max_queue`` the batcher stops holding for ``max_wait_us``
+  and dispatches the largest *exact* bucket that fits the backlog, so
+  no service time is spent on padding until the queue recovers.
+* ``deadline_us > 0`` gives every request a dispatch deadline of
+  ``arrival + deadline_us``. The batch hold window is deadline-aware
+  (a partial batch dispatches early rather than expiring its head);
+  a request still queued past its deadline — the engine was busy too
+  long — is shed with reason ``"deadline"``. Dispatching exactly at
+  the deadline still serves the request.
+
+Shed requests never execute and never complete: their latency /
+dispatch / completion entries are NaN, ``batch_index`` is -1, and the
+shed reason + simulated shed time are recorded per request.
+
 Per-request accounting lands in :class:`DrainResult` — dispatch /
 completion / latency per request plus a :class:`BatchRecord` per
-engine call.
+engine call, and a four-stage latency decomposition:
+
+* ``queue_wait_us``  — waiting because the engine was busy with
+  earlier batches (arrival until the engine freed up, clipped);
+* ``fill_wait_us``   — waiting for the batch to form (hold window /
+  later arrivals) once the engine could have taken it;
+* ``pad_us``         — the share of service time spent on pad rows,
+  ``service * (bucket - size) / bucket``;
+* ``compute_us``     — the remaining service time.
+
+The invariant ``queue_wait + fill_wait + pad + compute ==
+latencies_us`` holds **bit-exactly**: ``latencies_us`` is *defined* as
+that sum, evaluated left-to-right (:meth:`DrainResult.stage_sum`), and
+``completion_us - arrival`` agrees with it to float rounding.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 
 import numpy as np
+
+# shed-reason codes stored in DrainResult.shed_reason (int8)
+SHED_NONE = 0
+SHED_QUEUE_FULL = 1
+SHED_DEADLINE = 2
+SHED_REASONS = {SHED_QUEUE_FULL: "queue_full", SHED_DEADLINE: "deadline"}
+
+_SHED_POLICIES = ("reject", "drop-oldest", "degrade")
+_SHED_ALIASES = {"degrade-to-smaller-bucket": "degrade"}
 
 
 @dataclasses.dataclass(frozen=True)
 class BatchPolicy:
-    """When to dispatch, and which padded batch shapes exist.
+    """When to dispatch, which padded batch shapes exist, and what to
+    do under overload.
 
     max_batch: most requests per engine call.
     max_wait_us: how long the oldest queued request may wait for the
         batch to fill before dispatching anyway (0 = never hold).
     buckets: allowed padded batch sizes, ascending; defaults to the
         powers of two below ``max_batch`` plus ``max_batch`` itself.
+    max_queue: most requests allowed to *wait* (0 = unbounded). The
+        bound is what makes backpressure explicit: overload becomes
+        accounted shed events instead of unbounded queue growth.
+    deadline_us: dispatch deadline per request, from its arrival
+        (0 = none). The hold window is deadline-aware; requests the
+        engine cannot reach in time are shed, never silently late.
+    shed: overload policy when the queue is full — ``"reject"`` the
+        arrival, ``"drop-oldest"`` waiting request, or ``"degrade"``
+        to exact smaller buckets without shedding.
     """
     max_batch: int = 8
     max_wait_us: float = 0.0
     buckets: tuple[int, ...] = ()
+    max_queue: int = 0
+    deadline_us: float = 0.0
+    shed: str = "reject"
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -54,6 +112,17 @@ class BatchPolicy:
         if self.max_wait_us < 0:
             raise ValueError(
                 f"max_wait_us must be >= 0, got {self.max_wait_us}")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if self.deadline_us < 0:
+            raise ValueError(
+                f"deadline_us must be >= 0, got {self.deadline_us}")
+        shed = _SHED_ALIASES.get(self.shed, self.shed)
+        if shed not in _SHED_POLICIES:
+            raise ValueError(f"shed must be one of {_SHED_POLICIES} "
+                             f"(or alias 'degrade-to-smaller-bucket'), "
+                             f"got {self.shed!r}")
+        object.__setattr__(self, "shed", shed)
         buckets = tuple(int(b) for b in self.buckets)
         if not buckets:
             buckets = tuple(b for k in range(self.max_batch.bit_length())
@@ -76,14 +145,26 @@ class BatchPolicy:
                 return b
         raise AssertionError("unreachable: buckets[-1] >= max_batch")
 
+    def degrade_size(self, backlog: int) -> int:
+        """Degraded batch size for ``backlog`` waiting requests: the
+        largest bucket that fits exactly (no pad rows), capped at
+        ``max_batch``; falls back to the plain size when even the
+        smallest bucket is larger than the backlog."""
+        n = min(backlog, self.max_batch)
+        best = 0
+        for b in self.buckets:
+            if b <= n:
+                best = b
+        return best or n
+
 
 def linear_service_model(base_us: float = 200.0,
                          per_sample_us: float = 25.0):
     """Deterministic service-time model ``base + per_sample * bucket``.
 
     Used wherever reproducible latencies matter (the seeded example,
-    smoke tests); swap in ``service_model=None`` to measure the real
-    engine call instead.
+    the soak harness, smoke tests); swap in ``service_model=None`` to
+    measure the real engine call instead.
     """
     def model(bucket: int) -> float:
         return base_us + per_sample_us * bucket
@@ -111,28 +192,96 @@ def latency_metrics(latencies_us: np.ndarray,
 
 @dataclasses.dataclass(frozen=True)
 class BatchRecord:
-    """One engine call: requests [first, first+size) padded to bucket."""
+    """One engine call serving ``members`` padded to ``bucket``.
+
+    ``first``/``size`` describe the contiguous run ``[first,
+    first+size)`` when nothing was shed; under shedding ``members``
+    (arrival-ordered request indices) is authoritative and may skip
+    shed indices. ``degraded`` marks a degrade-mode dispatch (exact
+    bucket, no hold).
+    """
     first: int
     size: int
     bucket: int
     dispatch_us: float
     service_us: float
     completion_us: float
+    degraded: bool = False
+    members: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class ShedEvent:
+    """One shed request: which, why, and when (simulated µs)."""
+    index: int
+    reason: str
+    t_us: float
 
 
 @dataclasses.dataclass
 class DrainResult:
-    """Per-request accounting plus optional engine outputs."""
+    """Per-request accounting plus optional engine outputs.
+
+    All arrays are indexed by the original request order. For shed
+    requests ``latencies_us``/``dispatch_us``/``completion_us`` are
+    NaN, ``batch_index`` is -1, stage entries are 0, and
+    ``shed_reason``/``shed_time_us`` say why and when. ``outputs``
+    rows align with ``np.flatnonzero(served)`` (FIFO serve order).
+    """
     latencies_us: np.ndarray          # [N]
     dispatch_us: np.ndarray           # [N] when the request's batch left
     completion_us: np.ndarray         # [N] arrival + latency
     batch_index: np.ndarray           # [N] which BatchRecord served it
     batches: list[BatchRecord]
-    outputs: tuple | None = None      # (spikes [N,T,·], v [N,·], pkts [N,T])
+    outputs: tuple | None = None      # (spikes [n,T,·], v [n,·], pkts [n,T])
+    queue_wait_us: np.ndarray | None = None   # [N] engine-busy wait
+    fill_wait_us: np.ndarray | None = None    # [N] batch-formation wait
+    pad_us: np.ndarray | None = None          # [N] pad-row service share
+    compute_us: np.ndarray | None = None      # [N] real service share
+    served: np.ndarray | None = None          # [N] bool
+    shed_reason: np.ndarray | None = None     # [N] int8 SHED_* code
+    shed_time_us: np.ndarray | None = None    # [N] NaN unless shed
+
+    def __post_init__(self):
+        n = len(self.latencies_us)
+        if self.served is None:
+            self.served = np.ones(n, bool)
+        if self.shed_reason is None:
+            self.shed_reason = np.zeros(n, np.int8)
+        if self.shed_time_us is None:
+            self.shed_time_us = np.full(n, np.nan)
+        for f in ("queue_wait_us", "fill_wait_us", "pad_us", "compute_us"):
+            if getattr(self, f) is None:
+                setattr(self, f, np.zeros(n))
 
     @property
     def n_requests(self) -> int:
         return len(self.latencies_us)
+
+    @property
+    def n_served(self) -> int:
+        return int(self.served.sum())
+
+    @property
+    def n_shed(self) -> int:
+        return self.n_requests - self.n_served
+
+    def shed_events(self) -> list[ShedEvent]:
+        return [ShedEvent(int(i), SHED_REASONS[int(self.shed_reason[i])],
+                          float(self.shed_time_us[i]))
+                for i in np.flatnonzero(self.shed_reason)]
+
+    def shed_counts(self) -> dict[str, int]:
+        """{"queue_full": k, "deadline": m} — always both keys."""
+        return {name: int((self.shed_reason == code).sum())
+                for code, name in SHED_REASONS.items()}
+
+    def stage_sum(self) -> np.ndarray:
+        """THE summation order of the stage invariant: ``queue_wait +
+        fill_wait + pad + compute`` left-to-right. ``latencies_us`` of
+        served requests equals this bit-exactly by construction."""
+        return (self.queue_wait_us + self.fill_wait_us
+                + self.pad_us + self.compute_us)
 
     def bucket_histogram(self) -> dict[int, int]:
         hist: dict[int, int] = {}
@@ -141,13 +290,241 @@ class DrainResult:
         return hist
 
     def metrics(self) -> dict:
-        """:func:`latency_metrics` plus batch/bucket accounting; the
-        key set is stable, including for an empty drain."""
-        m = latency_metrics(self.latencies_us, self.completion_us)
+        """:func:`latency_metrics` over *served* requests plus batch /
+        bucket / shed / stage accounting; the key set is stable,
+        including for an empty drain."""
+        mask = self.served
+        m = latency_metrics(self.latencies_us[mask],
+                            self.completion_us[mask])
         m["batches"] = len(self.batches)
         m["buckets"] = self.bucket_histogram()
+        shed = self.shed_counts()
+        m["shed"] = shed
+        m["shed_frac"] = (self.n_shed / self.n_requests
+                          if self.n_requests else 0.0)
+        m["deadline_misses"] = shed["deadline"]
+        m["degraded_batches"] = sum(1 for b in self.batches if b.degraded)
+        n_srv = self.n_served
+        m["stages_us"] = {
+            "queue_wait": float(self.queue_wait_us[mask].mean())
+            if n_srv else 0.0,
+            "batch_fill": float(self.fill_wait_us[mask].mean())
+            if n_srv else 0.0,
+            "pad": float(self.pad_us[mask].mean()) if n_srv else 0.0,
+            "compute": float(self.compute_us[mask].mean())
+            if n_srv else 0.0,
+        }
         return m
 
+
+# ---------------------------------------------------------------------------
+# The event-driven queue simulation shared by MicroBatcher.drain,
+# Server(timeline="shared") and the replay soak harness.
+# ---------------------------------------------------------------------------
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class _QueueSpec:
+    """One FIFO queue feeding the (possibly shared) engine."""
+    policy: BatchPolicy
+    arrivals: np.ndarray                   # sorted nondecreasing float64
+    requests: np.ndarray | None            # [N, T, n_in] or None
+    runner: object | None                  # batch callable or None
+    service_model: object | None           # bucket -> µs or None
+
+
+class _QueueState:
+    """Mutable per-queue simulation state + result accumulators."""
+
+    def __init__(self, spec: _QueueSpec):
+        n = len(spec.arrivals)
+        self.spec = spec
+        self.waiting: deque[int] = deque()
+        self.free = 0.0                    # per-queue engine clock
+        self.lat = np.zeros(n)
+        self.disp = np.zeros(n)
+        self.comp = np.zeros(n)
+        self.qw = np.zeros(n)
+        self.fw = np.zeros(n)
+        self.pad = np.zeros(n)
+        self.cu = np.zeros(n)
+        self.b_idx = np.zeros(n, np.int64)
+        self.served = np.zeros(n, bool)
+        self.reason = np.zeros(n, np.int8)
+        self.shed_t = np.full(n, np.nan)
+        self.batches: list[BatchRecord] = []
+        self.out_s: list = []
+        self.out_v: list = []
+        self.out_p: list = []
+
+    def shed(self, i: int, code: int, t: float) -> None:
+        self.reason[i] = code
+        self.shed_t[i] = t
+        self.lat[i] = self.disp[i] = self.comp[i] = np.nan
+        self.b_idx[i] = -1
+
+    def result(self) -> DrainResult:
+        outputs = None
+        if self.spec.runner is not None and self.out_s:
+            outputs = (np.concatenate(self.out_s),
+                       np.concatenate(self.out_v),
+                       np.concatenate(self.out_p))
+        return DrainResult(self.lat, self.disp, self.comp, self.b_idx,
+                           self.batches, outputs, self.qw, self.fw,
+                           self.pad, self.cu, self.served, self.reason,
+                           self.shed_t)
+
+
+def _simulate(specs: list[_QueueSpec], *,
+              shared_engine: bool) -> list[_QueueState]:
+    """Run every queue to completion on the simulated clock.
+
+    ``shared_engine=True`` threads ONE serially-busy engine through
+    all queues (dispatches interleave in time order, ties broken by
+    queue order); ``False`` gives each queue its own engine clock.
+    Event order at equal times: arrivals first (a request arriving
+    exactly at a dispatch horizon joins the batch), then dispatches
+    (dispatching exactly at a deadline serves the request), then
+    deadline expiries.
+    """
+    states = [_QueueState(s) for s in specs]
+    shared_free = 0.0
+    now = 0.0      # time of the last processed event: dispatches never
+    #                schedule into the past (e.g. when degrade overload
+    #                collapses a hold window already partially elapsed)
+
+    # merged arrival schedule: (time, queue, local index), stable order
+    events = sorted((float(t), q, i)
+                    for q, s in enumerate(specs)
+                    for i, t in enumerate(s.arrivals))
+    ev = 0
+
+    def engine_free(q: int) -> float:
+        return shared_free if shared_engine else states[q].free
+
+    def candidates(q: int) -> tuple[float, float]:
+        """(dispatch time, head-expiry time) for queue q, inf if n/a."""
+        st = states[q]
+        if not st.waiting:
+            return _INF, _INF
+        pol = st.spec.policy
+        a = st.spec.arrivals
+        head = st.waiting[0]
+        t0 = max(engine_free(q), float(a[head]), now)
+        overload = (pol.shed == "degrade" and pol.max_queue > 0
+                    and len(st.waiting) > pol.max_queue)
+        if pol.max_wait_us > 0 and not overload:
+            hold = float(a[head]) + pol.max_wait_us
+            if pol.deadline_us > 0:       # deadline-aware hold window
+                hold = min(hold, float(a[head]) + pol.deadline_us)
+            horizon = max(t0, hold)
+        else:
+            horizon = t0
+        if len(st.waiting) >= pol.max_batch:
+            dispatch = max(t0, float(a[st.waiting[pol.max_batch - 1]]))
+        else:
+            dispatch = horizon
+        expiry = (float(a[head]) + pol.deadline_us
+                  if pol.deadline_us > 0 else _INF)
+        return dispatch, expiry
+
+    def admit(q: int, i: int, t: float) -> None:
+        st = states[q]
+        pol = st.spec.policy
+        if (pol.max_queue > 0 and len(st.waiting) >= pol.max_queue
+                and pol.shed != "degrade"):
+            if pol.shed == "reject":
+                st.shed(i, SHED_QUEUE_FULL, t)
+                return
+            st.shed(st.waiting.popleft(), SHED_QUEUE_FULL, t)
+        st.waiting.append(i)
+
+    def dispatch(q: int, d: float) -> None:
+        nonlocal shared_free
+        st = states[q]
+        spec = st.spec
+        pol = spec.policy
+        a = spec.arrivals
+        free_before = engine_free(q)
+        degraded = (pol.shed == "degrade" and pol.max_queue > 0
+                    and len(st.waiting) > pol.max_queue)
+        n = (pol.degrade_size(len(st.waiting)) if degraded
+             else min(len(st.waiting), pol.max_batch))
+        members = [st.waiting.popleft() for _ in range(n)]
+        bucket = pol.bucket_of(n)
+        measured_us = 0.0
+        if spec.runner is not None:
+            batch = spec.requests[np.asarray(members)]
+            if n < bucket:                 # pad to the bucket shape
+                padrows = np.zeros((bucket - n,) + batch.shape[1:],
+                                   batch.dtype)
+                batch = np.concatenate([batch, padrows])
+            t_wall = time.perf_counter()
+            spikes, v, stats = spec.runner(batch)
+            measured_us = (time.perf_counter() - t_wall) * 1e6
+            st.out_s.append(spikes[:n])
+            st.out_v.append(v[:n])
+            st.out_p.append(np.asarray(stats["packet_counts"])[:n])
+        service_us = (spec.service_model(bucket)
+                      if spec.service_model is not None else measured_us)
+        completion = d + service_us
+        pad_ratio = (bucket - n) / bucket
+        for r in members:
+            wait = d - float(a[r])
+            q_wait = min(wait, max(0.0, free_before - float(a[r])))
+            f_wait = wait - q_wait
+            pad_v = service_us * pad_ratio
+            cu_v = service_us - pad_v
+            st.qw[r] = q_wait
+            st.fw[r] = f_wait
+            st.pad[r] = pad_v
+            st.cu[r] = cu_v
+            # latency is DEFINED as the stage sum (stage_sum order) so
+            # the decomposition invariant holds bit-exactly
+            st.lat[r] = ((q_wait + f_wait) + pad_v) + cu_v
+            st.disp[r] = d
+            st.comp[r] = completion
+            st.b_idx[r] = len(st.batches)
+            st.served[r] = True
+        st.batches.append(BatchRecord(members[0], n, bucket, d, service_us,
+                                      completion, degraded, tuple(members)))
+        if shared_engine:
+            shared_free = completion
+        else:
+            st.free = completion
+
+    while True:
+        t_arr = events[ev][0] if ev < len(events) else _INF
+        best_d = best_e = _INF
+        q_d = q_e = -1
+        for q in range(len(states)):
+            d, e = candidates(q)
+            if d < best_d:
+                best_d, q_d = d, q
+            if e < best_e:
+                best_e, q_e = e, q
+        if t_arr == _INF and best_d == _INF and best_e == _INF:
+            break
+        if t_arr <= best_d and t_arr <= best_e:
+            _, q, i = events[ev]
+            ev += 1
+            now = max(now, t_arr)
+            admit(q, i, t_arr)
+        elif best_d <= best_e:
+            now = max(now, best_d)
+            dispatch(q_d, best_d)
+        else:
+            now = max(now, best_e)
+            st = states[q_e]
+            st.shed(st.waiting.popleft(), SHED_DEADLINE, best_e)
+    return states
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher: the public single-queue surface over the simulation.
+# ---------------------------------------------------------------------------
 
 class MicroBatcher:
     """Drain an arrival-ordered request queue in padded micro-batches.
@@ -167,9 +544,12 @@ class MicroBatcher:
         if runner is None and service_model is None:
             raise ValueError("need a service_model when there is no runner "
                              "to measure (simulation-only batcher)")
+        self._warmed: set[tuple] = set()   # (bucket, T, dtype) warmed keys
 
     def _warm_buckets(self, sample_shape: tuple, dtype) -> None:
-        """Warm one compilation per policy bucket (measured mode).
+        """Warm one compilation per policy bucket (measured mode),
+        exactly once per ``(bucket, timesteps, dtype)`` key — repeated
+        drains on the same shapes skip the warm-up entirely.
 
         Preferred path: the runner's ``precompile(buckets, timesteps)``
         hook — the same AOT layer ``Program.load``/registry insert use
@@ -179,47 +559,26 @@ class MicroBatcher:
         plain-function runners fall back to throwaway zero-batch
         calls.
         """
+        t_steps = int(sample_shape[0])
+        key_dtype = np.dtype(dtype).str
+        todo = tuple(b for b in self.policy.buckets
+                     if (b, t_steps, key_dtype) not in self._warmed)
+        if not todo:
+            return
         pre = getattr(self.runner, "precompile", None)
         if pre is None:
             owner = getattr(self.runner, "__self__", None)
             pre = getattr(owner, "precompile", None)
         if pre is not None:
-            pre(self.policy.buckets, sample_shape[0])
-            return
-        for b in self.policy.buckets:
-            self.runner(np.zeros((b,) + sample_shape, dtype))
+            pre(todo, t_steps)
+        else:
+            for b in todo:
+                self.runner(np.zeros((b,) + tuple(sample_shape), dtype))
+        self._warmed.update((b, t_steps, key_dtype) for b in todo)
 
-    # -- queue simulation ---------------------------------------------------
-
-    def _admit(self, arrivals: np.ndarray, i: int, clock: float
-               ) -> tuple[int, float]:
-        """How many requests join the batch starting at ``i``, and when
-        the batch dispatches (full, or the oldest waited out)."""
-        pol = self.policy
-        n_total = len(arrivals)
-        t0 = max(clock, float(arrivals[i]))      # oldest request ready
-        horizon = (max(t0, float(arrivals[i]) + pol.max_wait_us)
-                   if pol.max_wait_us > 0 else t0)
-        n = 1
-        while (n < pol.max_batch and i + n < n_total
-               and arrivals[i + n] <= horizon):
-            n += 1
-        if n == pol.max_batch:                   # full: leave immediately
-            dispatch = max(t0, float(arrivals[i + n - 1]))
-        else:                                    # waited out the window
-            dispatch = horizon
-        return n, dispatch
-
-    # -- public API ---------------------------------------------------------
-
-    def drain(self, arrivals_us: np.ndarray,
-              requests: np.ndarray | None = None) -> DrainResult:
-        """Serve every request once, FIFO, under the policy.
-
-        arrivals_us: nondecreasing arrival times (one per request).
-        requests: binary ``[N, T, n_inputs]`` spike trains, required
-        when the batcher owns a runner.
-        """
+    def _queue_spec(self, arrivals_us: np.ndarray,
+                    requests: np.ndarray | None) -> _QueueSpec:
+        """Validate inputs, warm buckets, return the simulation spec."""
         arrivals = np.asarray(arrivals_us, np.float64)
         if arrivals.ndim != 1:
             raise ValueError(f"arrivals_us must be 1-D, got shape "
@@ -240,48 +599,34 @@ class MicroBatcher:
             # measured mode: warm one engine compilation per bucket so
             # jit time never counts as service time on the first hit
             self._warm_buckets(requests.shape[1:], requests.dtype)
-        n_total = len(arrivals)
-        lat = np.zeros(n_total)
-        disp = np.zeros(n_total)
-        comp = np.zeros(n_total)
-        b_idx = np.zeros(n_total, np.int64)
-        batches: list[BatchRecord] = []
-        out_s: list = []
-        out_v: list = []
-        out_p: list = []
+        return _QueueSpec(self.policy, arrivals, requests, self.runner,
+                          self.service_model)
 
-        clock = 0.0
-        i = 0
-        while i < n_total:
-            n, dispatch = self._admit(arrivals, i, clock)
-            bucket = self.policy.bucket_of(n)
-            measured_us = 0.0
-            if self.runner is not None:
-                batch = requests[i:i + n]
-                if n < bucket:                   # pad to the bucket shape
-                    pad = np.zeros((bucket - n,) + batch.shape[1:],
-                                   batch.dtype)
-                    batch = np.concatenate([batch, pad])
-                t_wall = time.perf_counter()
-                spikes, v, stats = self.runner(batch)
-                measured_us = (time.perf_counter() - t_wall) * 1e6
-                out_s.append(spikes[:n])
-                out_v.append(v[:n])
-                out_p.append(np.asarray(stats["packet_counts"])[:n])
-            service_us = (self.service_model(bucket)
-                          if self.service_model is not None else measured_us)
-            completion = dispatch + service_us
-            lat[i:i + n] = completion - arrivals[i:i + n]
-            disp[i:i + n] = dispatch
-            comp[i:i + n] = completion
-            b_idx[i:i + n] = len(batches)
-            batches.append(BatchRecord(i, n, bucket, dispatch, service_us,
-                                       completion))
-            clock = completion                   # engine serially busy
-            i += n
+    # -- public API ---------------------------------------------------------
 
-        outputs = None
-        if self.runner is not None and out_s:
-            outputs = (np.concatenate(out_s), np.concatenate(out_v),
-                       np.concatenate(out_p))
-        return DrainResult(lat, disp, comp, b_idx, batches, outputs)
+    def drain(self, arrivals_us: np.ndarray,
+              requests: np.ndarray | None = None) -> DrainResult:
+        """Serve every request once, FIFO, under the policy.
+
+        arrivals_us: nondecreasing arrival times (one per request).
+        requests: binary ``[N, T, n_inputs]`` spike trains, required
+        when the batcher owns a runner.
+        """
+        spec = self._queue_spec(arrivals_us, requests)
+        return _simulate([spec], shared_engine=False)[0].result()
+
+
+def drain_together(items: list[tuple["MicroBatcher", np.ndarray,
+                                     np.ndarray | None]]
+                   ) -> list[DrainResult]:
+    """Drain several queues against ONE serially-shared engine.
+
+    ``items`` is ``[(batcher, arrivals_us, requests-or-None), ...]``;
+    queue order breaks simultaneous-dispatch ties. This is the
+    timeline :class:`~repro.serve.server.Server` uses for its default
+    ``timeline="shared"`` totals and what the replay soak harness
+    replays traces through.
+    """
+    specs = [b._queue_spec(arr, req) for b, arr, req in items]
+    return [st.result()
+            for st in _simulate(specs, shared_engine=True)]

@@ -19,10 +19,14 @@ warming.
 from __future__ import annotations
 
 from pathlib import Path
+from typing import TYPE_CHECKING
 
 from repro.core.execution import (ExecutionSpec, as_spec,
                                   spec_from_legacy_kwargs)
 from repro.core.program import Program
+
+if TYPE_CHECKING:                          # pragma: no cover
+    from repro.serve.batcher import BatchPolicy
 
 
 class ProgramRegistry:
@@ -30,13 +34,15 @@ class ProgramRegistry:
 
     def __init__(self):
         self._programs: dict[str, Program] = {}
+        self._policies: dict[str, "BatchPolicy"] = {}
 
     # -- registration -------------------------------------------------------
 
     def register(self, name: str, program: Program, *, precompile=None,
                  timesteps: int | None = None,
                  spec: ExecutionSpec | None = None,
-                 verify: bool = False) -> Program:
+                 verify: bool = False,
+                 policy: "BatchPolicy | None" = None) -> Program:
         """Register a loaded program; duplicate names are rejected.
 
         ``precompile=`` AOT-compiles the given batch buckets (padded
@@ -47,6 +53,12 @@ class ProgramRegistry:
         (:meth:`Program.verify`, DESIGN.md §13) and rejects it with
         ``ValueError`` listing the diagnostics if any checker reports
         an ERROR — the "safe to serve" gate, run before any AOT work.
+
+        ``policy=`` attaches the model's serving
+        :class:`~repro.serve.batcher.BatchPolicy` (queue bound, shed /
+        deadline behavior, buckets) to the registration, so deployment
+        config travels with the model: ``Server``/``AsyncServer``
+        resolve it when no per-call override is given.
         """
         if not name:
             raise ValueError("model name must be non-empty")
@@ -66,24 +78,33 @@ class ProgramRegistry:
                                  "to fix the T axis of the AOT shapes")
             program.precompile(precompile, timesteps, spec)
         self._programs[name] = program
+        if policy is not None:
+            self._policies[name] = policy
         return program
 
     def load(self, name: str, path: str | Path, *, precompile=None,
              timesteps: int | None = None,
              spec: ExecutionSpec | None = None,
-             verify: bool = False) -> Program:
+             verify: bool = False,
+             policy: "BatchPolicy | None" = None) -> Program:
         """``Program.load`` an artifact and register it under ``name``
         (statically verifying first when ``verify=True``,
         AOT-precompiling the serving shapes when ``precompile=`` is
         given)."""
         return self.register(name, Program.load(path),
                              precompile=precompile, timesteps=timesteps,
-                             spec=spec, verify=verify)
+                             spec=spec, verify=verify, policy=policy)
 
     def unregister(self, name: str) -> Program:
         if name not in self._programs:
             raise KeyError(f"model {name!r} not registered")
+        self._policies.pop(name, None)
         return self._programs.pop(name)
+
+    def policy(self, name: str) -> "BatchPolicy | None":
+        """The serving policy registered with the model, if any."""
+        self.get(name)                     # KeyError on unknown names
+        return self._policies.get(name)
 
     # -- lookup -------------------------------------------------------------
 

@@ -3,17 +3,23 @@
 Covers: (a) micro-batcher queue semantics — FIFO order per stream,
 every request served exactly once, buckets always from the policy's
 pow2 set, deterministic simulated-clock accounting (exact expected
-latencies plus hypothesis properties); (b) sharded-vs-single-device
-bit-exactness over feedforward + recurrent graphs and ragged batch
-sizes (1, D-1, D, 3D+1) — spikes, potentials AND packet counts
-byte-identical; (c) registry semantics (duplicate-name rejection, lazy
-per-model engine ownership); (d) the golden-artifact format pin; and
-(e) the seeded serving example reporting identical p50/p99 twice.
+latencies plus hypothesis properties); (b) overload semantics —
+bounded queues, reject / drop-oldest / degrade shedding, dispatch
+deadlines, and the bit-exact four-stage latency decomposition;
+(c) sharded-vs-single-device bit-exactness over feedforward +
+recurrent graphs and ragged batch sizes (1, D-1, D, 3D+1) — spikes,
+potentials AND packet counts byte-identical; (d) registry semantics
+(duplicate-name rejection, lazy per-model engine ownership, attached
+policies); (e) the server's explicit shared / per-engine timeline
+accounting; (f) the asyncio front-end (backpressure as exceptions,
+real-clock stages); (g) the golden-artifact format pin; and (h) the
+seeded serving example reporting identical p50/p99 twice.
 
 Runs on single-device CPU and on the 8-virtual-device CI ``serving``
 lane (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the
 device count is read from jax, never assumed.
 """
+import asyncio
 import importlib.util
 import json
 import sys
@@ -27,9 +33,10 @@ import pytest
 from conftest import make_ext, make_feedforward, make_hw
 from repro.core import ExecutionSpec, Program, compile, random_graph
 from repro.launch.mesh import make_serving_mesh
-from repro.serve import (BatchPolicy, MicroBatcher, ProgramRegistry,
-                         Request, Server, ShardedRunner,
-                         linear_service_model)
+from repro.serve import (AsyncServer, BatchPolicy, DeadlineMissError,
+                         MicroBatcher, ProgramRegistry, QueueFullError,
+                         Request, SHED_DEADLINE, SHED_QUEUE_FULL, Server,
+                         ShardedRunner, ShedError, linear_service_model)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -171,7 +178,132 @@ def test_batcher_empty_queue():
     assert m["requests"] == 0 and m["batches"] == 0
     # the key set is schema-stable even with nothing served
     assert {"p50_ms", "p99_ms", "mean_ms", "throughput_rps",
-            "buckets"} <= set(m)
+            "buckets", "shed", "shed_frac", "stages_us"} <= set(m)
+
+
+# ---------------------------------------------------------------------------
+# Overload semantics: bounded queues, shedding, deadlines, degrade
+# ---------------------------------------------------------------------------
+
+def test_policy_overload_validation():
+    with pytest.raises(ValueError):
+        BatchPolicy(max_queue=-1)
+    with pytest.raises(ValueError):
+        BatchPolicy(deadline_us=-1.0)
+    with pytest.raises(ValueError):
+        BatchPolicy(shed="panic")
+    # the long-form alias normalizes to the canonical name
+    assert BatchPolicy(shed="degrade-to-smaller-bucket").shed == "degrade"
+    assert BatchPolicy().shed == "reject"
+
+
+def test_batcher_reject_sheds_arrivals():
+    """shed='reject': an arrival finding the queue full is shed at its
+    arrival time; everyone already queued is untouched."""
+    pol = BatchPolicy(max_batch=1, max_queue=1, shed="reject")
+    res = MicroBatcher(pol, service_model=LINEAR).drain(
+        np.array([0.0, 10.0, 20.0, 30.0]))
+    # r0 dispatches at 0 (engine busy to 110); r1 waits; r2, r3 find
+    # the one waiting slot taken and are rejected on arrival
+    np.testing.assert_array_equal(res.served, [True, True, False, False])
+    np.testing.assert_array_equal(
+        res.shed_reason, [0, 0, SHED_QUEUE_FULL, SHED_QUEUE_FULL])
+    np.testing.assert_allclose(res.shed_time_us[2:], [20.0, 30.0])
+    np.testing.assert_allclose(res.latencies_us[:2], [110.0, 210.0])
+    assert np.isnan(res.latencies_us[2:]).all()
+    assert np.isnan(res.completion_us[2:]).all()
+    assert list(res.batch_index[2:]) == [-1, -1]
+    assert res.metrics()["shed"] == {"queue_full": 2, "deadline": 0}
+    assert res.metrics()["shed_frac"] == 0.5
+
+
+def test_batcher_drop_oldest_shed_head():
+    """shed='drop-oldest': the queue head is shed to admit the
+    arrival, so the freshest requests survive overload."""
+    pol = BatchPolicy(max_batch=1, max_queue=1, shed="drop-oldest")
+    res = MicroBatcher(pol, service_model=LINEAR).drain(
+        np.array([0.0, 10.0, 20.0, 30.0]))
+    np.testing.assert_array_equal(res.served, [True, False, False, True])
+    np.testing.assert_allclose(res.shed_time_us[1:3], [20.0, 30.0])
+    # r3 dispatches when the engine frees at 110 -> latency 190
+    np.testing.assert_allclose(res.latencies_us[[0, 3]], [110.0, 190.0])
+
+
+def test_batcher_deadline_sheds_unreachable_requests():
+    """A request still queued past arrival + deadline_us is shed with
+    reason 'deadline' at its expiry time."""
+    pol = BatchPolicy(max_batch=1, deadline_us=50.0)
+    res = MicroBatcher(pol, service_model=LINEAR).drain(
+        np.array([0.0, 10.0, 20.0]))
+    # engine busy with r0 until 110; r1 expires at 60, r2 at 70
+    np.testing.assert_array_equal(res.served, [True, False, False])
+    np.testing.assert_array_equal(
+        res.shed_reason, [0, SHED_DEADLINE, SHED_DEADLINE])
+    np.testing.assert_allclose(res.shed_time_us[1:], [60.0, 70.0])
+    assert res.metrics()["deadline_misses"] == 2
+
+
+def test_batcher_deadline_aware_hold_window():
+    """The batch hold window is clipped to the head's deadline: the
+    partial batch dispatches exactly at the deadline and is served."""
+    pol = BatchPolicy(max_batch=4, max_wait_us=100.0, deadline_us=40.0)
+    res = MicroBatcher(pol, service_model=LINEAR).drain(
+        np.array([0.0, 5.0]))
+    assert len(res.batches) == 1
+    assert res.batches[0].dispatch_us == 40.0     # deadline, not 100
+    np.testing.assert_array_equal(res.served, [True, True])
+    np.testing.assert_allclose(res.latencies_us, [160.0, 155.0])
+
+
+def test_batcher_degrade_dispatches_exact_buckets():
+    """shed='degrade' never sheds: over max_queue the batcher skips
+    the hold window and serves the largest exact bucket (zero pad)."""
+    pol = BatchPolicy(max_batch=8, max_queue=2, max_wait_us=1000.0,
+                      shed="degrade")
+    res = MicroBatcher(pol, service_model=LINEAR).drain(np.zeros(6))
+    assert res.n_shed == 0
+    # backlog 6 > 2: degraded dispatch of exactly 4 at t=0 (no pad);
+    # backlog 2 <= 2: normal held dispatch at the 1000us horizon
+    assert [(b.size, b.bucket, b.degraded, b.dispatch_us)
+            for b in res.batches] == [(4, 4, True, 0.0),
+                                      (2, 2, False, 1000.0)]
+    assert np.all(res.pad_us == 0.0)              # exact buckets only
+    assert res.metrics()["degraded_batches"] == 1
+
+
+def test_stage_decomposition_sums_bit_exactly():
+    """queue_wait + fill_wait + pad + compute == latencies_us, to the
+    bit, served requests only; shed rows carry zero stages."""
+    rng = np.random.default_rng(5)
+    arr = np.cumsum(rng.exponential(30.0, 400))
+    pol = BatchPolicy(max_batch=8, max_wait_us=40.0, max_queue=6,
+                      deadline_us=900.0, shed="reject")
+    res = MicroBatcher(pol, service_model=LINEAR).drain(arr)
+    assert 0 < res.n_served < res.n_requests      # both populations
+    s = res.served
+    np.testing.assert_array_equal(res.stage_sum()[s], res.latencies_us[s])
+    # the wall-clock identity holds to float rounding
+    np.testing.assert_allclose(res.completion_us[s] - arr[s],
+                               res.latencies_us[s])
+    for stage in (res.queue_wait_us, res.fill_wait_us, res.pad_us,
+                  res.compute_us):
+        assert np.all(stage >= 0.0)
+        assert np.all(stage[~s] == 0.0)
+    m = res.metrics()
+    assert set(m["stages_us"]) == {"queue_wait", "batch_fill", "pad",
+                                   "compute"}
+    assert sum(m["stages_us"].values()) == pytest.approx(
+        res.latencies_us[s].mean())
+
+
+def test_default_policy_has_no_overload_behavior():
+    """max_queue=0 / deadline_us=0 reproduces the original unbounded
+    queue bit-exactly: nothing shed, same pinned latencies."""
+    res = MicroBatcher(BatchPolicy(max_batch=2),
+                       service_model=LINEAR).drain(ARR)
+    assert res.n_shed == 0 and np.all(res.served)
+    np.testing.assert_allclose(res.latencies_us,
+                               [110.0, 220.0, 210.0, 110.0, 219.0])
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +365,82 @@ if HAVE_HYPOTHESIS:
         assert np.all(res.dispatch_us >= arr)
         for prev, nxt in zip(res.batches, res.batches[1:]):
             assert nxt.dispatch_us >= prev.completion_us
+
+    # overload policies: every shed mode, bounded queues, deadlines
+    overload_policies = st.builds(
+        BatchPolicy,
+        max_batch=st.integers(min_value=1, max_value=8),
+        max_wait_us=st.sampled_from([0.0, 30.0, 500.0]),
+        max_queue=st.integers(min_value=0, max_value=4),
+        deadline_us=st.sampled_from([0.0, 150.0, 2000.0]),
+        shed=st.sampled_from(["reject", "drop-oldest", "degrade"]))
+
+    @given(overload_policies, arrival_gaps)
+    @settings(max_examples=100, deadline=None)
+    def test_property_shed_requests_never_complete(policy, gaps):
+        arr = np.cumsum(np.asarray(gaps))
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        assert res.n_served + res.n_shed == len(arr)
+        shed = ~res.served
+        # a shed request has no completion, no batch, a recorded
+        # reason + time; a served one has all three and no reason
+        assert np.isnan(res.completion_us[shed]).all()
+        assert np.isnan(res.latencies_us[shed]).all()
+        assert np.all(res.batch_index[shed] == -1)
+        assert np.all(res.shed_reason[shed] != 0)
+        assert not np.isnan(res.shed_time_us[shed]).any()
+        assert not np.isnan(res.completion_us[res.served]).any()
+        assert np.all(res.shed_reason[res.served] == 0)
+        served_members = [r for b in res.batches for r in b.members]
+        assert sorted(served_members) == \
+            sorted(np.flatnonzero(res.served))
+        if policy.shed == "degrade":    # degrade never sheds for
+            assert res.shed_counts()["queue_full"] == 0   # queue-full
+
+    @given(overload_policies, arrival_gaps)
+    @settings(max_examples=100, deadline=None)
+    def test_property_stage_sum_is_latency_bit_exact(policy, gaps):
+        arr = np.cumsum(np.asarray(gaps))
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        s = res.served
+        assert np.array_equal(res.stage_sum()[s], res.latencies_us[s])
+        for stage in (res.queue_wait_us, res.fill_wait_us, res.pad_us,
+                      res.compute_us):
+            assert np.all(stage[~s] == 0.0) and np.all(stage >= 0.0)
+
+    @given(overload_policies, arrival_gaps,
+           st.integers(min_value=1, max_value=5))
+    @settings(max_examples=100, deadline=None)
+    def test_property_fifo_per_stream_survives_backpressure(
+            policy, gaps, n_streams):
+        arr = np.cumsum(np.asarray(gaps))
+        streams = np.arange(len(arr)) % n_streams
+        res = MicroBatcher(policy, service_model=LINEAR).drain(arr)
+        for s in range(n_streams):
+            comp = res.completion_us[(streams == s) & res.served]
+            assert np.all(np.diff(comp) >= 0)   # survivors stay FIFO
+
+    @given(st.lists(st.integers(min_value=0, max_value=800),
+                    min_size=1, max_size=64),
+           st.sampled_from([0.25, 0.5]),
+           st.sampled_from([120.0, 400.0, 1500.0]))
+    @settings(max_examples=100, deadline=None)
+    def test_property_deadline_misses_monotone_in_offered_load(
+            gaps, scale, deadline):
+        """Compressing every inter-arrival gap (raising offered load)
+        never decreases any request's queue wait — the Lindley
+        recursion for the serial max_batch=1 queue — so the count of
+        would-be deadline misses is monotone in offered load.
+        Integer gaps + a power-of-two scale keep every simulated
+        quantity exact in float64, so the comparison is bit-level."""
+        arr = np.cumsum(np.asarray(gaps, np.float64))
+        pol = BatchPolicy(max_batch=1)       # serial queue, no hold
+        base = MicroBatcher(pol, service_model=LINEAR).drain(arr)
+        loaded = MicroBatcher(pol, service_model=LINEAR).drain(
+            arr * scale)
+        assert np.all(loaded.queue_wait_us >= base.queue_wait_us)
+        assert (loaded.queue_wait_us > deadline).sum() >= \
+            (base.queue_wait_us > deadline).sum()
 else:                                   # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_property_batcher_suite():
@@ -281,6 +489,29 @@ def test_batcher_measured_mode_warms_buckets(ff_program):
     assert np.all(res.latencies_us > 0)
     np.testing.assert_allclose(res.completion_us - arr, res.latencies_us)
     assert [b.service_us > 0 for b in res.batches] == [True, True]
+
+
+def test_batcher_warm_cache_skips_repeat_drains(ff_program):
+    """Warming is cached per (bucket, T, dtype): a second drain on the
+    same shapes issues only real batch calls, no warm-up calls."""
+    g = ff_program.graph
+    calls = []
+
+    def runner(batch):                   # plain function: no precompile
+        calls.append(len(batch))         # hook, so warming is observable
+        return ff_program.run(batch)
+
+    batcher = MicroBatcher(BatchPolicy(max_batch=4), runner=runner)
+    reqs = make_ext(g, 5, 6, seed=9)
+    batcher.drain(np.zeros(5), reqs)
+    # 3 warm calls (buckets 1, 2, 4) + 2 batch calls (sizes 4, 1)
+    assert len(calls) == 5
+    batcher.drain(np.zeros(5), reqs)     # same shapes: cache hit
+    assert len(calls) == 7
+    assert calls[5:] == [4, 1]           # batch dispatches only
+    # a new T axis is a new compilation: warming runs again
+    batcher.drain(np.zeros(5), make_ext(g, 5, 7, seed=9))
+    assert calls[7:10] == [1, 2, 4]
 
 
 # ---------------------------------------------------------------------------
@@ -446,6 +677,281 @@ def test_server_per_model_policy_override(ff_program, rec_program):
     metrics = srv.serve(_stream(ff_program, rec_program))
     assert set(metrics["models"]["rec"]["buckets"]) == {1}   # no batching
     assert max(metrics["models"]["ff"]["buckets"]) > 1       # held + batched
+
+
+def test_server_two_model_shared_timeline_regression(ff_program,
+                                                     rec_program):
+    """Totals regression: two models, one request each at t=0, on ONE
+    engine. The pre-timeline server reported both models completing at
+    110us as if they ran concurrently; on the shared timeline the
+    second dispatch waits for the first, so the corrected span is
+    220us and throughput exactly halves."""
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    reg.register("rec", rec_program)
+    mk = lambda name, p: Request(
+        name, np.zeros((8, p.graph.n_inputs), np.int32), 0.0)
+    stream = [mk("ff", ff_program), mk("rec", rec_program)]
+
+    shared = Server(reg, policy=BatchPolicy(max_batch=1),
+                    service_model=LINEAR).serve(stream)
+    t = shared["total"]
+    assert t["timeline"] == "shared" and t["requests"] == 2
+    # queue order is sorted model names: ff at [0, 110], rec [110, 220]
+    assert t["p50_ms"] == pytest.approx(0.165)          # (110+220)/2 us
+    assert t["throughput_rps"] == pytest.approx(2 / 220e-6)
+
+    per = Server(reg, policy=BatchPolicy(max_batch=1),
+                 service_model=LINEAR,
+                 timeline="per-engine").serve(stream)
+    # dedicated engines: both complete at 110us, double the throughput
+    assert per["total"]["timeline"] == "per-engine"
+    assert per["total"]["p50_ms"] == pytest.approx(0.110)
+    assert per["total"]["throughput_rps"] == pytest.approx(2 / 110e-6)
+
+    with pytest.raises(ValueError, match="timeline"):
+        Server(reg, timeline="concurrent-ish", service_model=LINEAR)
+
+
+def test_server_shared_timeline_interleaves_engine(ff_program,
+                                                   rec_program):
+    """Per-model completions on the shared timeline reflect the one
+    serially-busy engine, not per-model clocks from zero."""
+    reg = ProgramRegistry()
+    reg.register("a", ff_program)
+    reg.register("b", rec_program)
+    ext = {n: np.zeros((8, p.graph.n_inputs), np.int32)
+           for n, p in (("a", ff_program), ("b", rec_program))}
+    srv = Server(reg, policy=BatchPolicy(max_batch=1),
+                 service_model=LINEAR)
+    srv.serve([Request("a", ext["a"], 0.0), Request("b", ext["b"], 0.0)])
+    np.testing.assert_allclose(
+        srv.last_results["a"].completion_us, [110.0])
+    np.testing.assert_allclose(
+        srv.last_results["b"].completion_us, [220.0])
+
+
+def test_server_ragged_shapes_raise_named_valueerror(ff_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    srv = Server(reg, service_model=LINEAR)
+    n_in = ff_program.graph.n_inputs
+    good = Request("ff", np.zeros((8, n_in), np.int32), 0.0, stream=0)
+    ragged = Request("ff", np.zeros((9, n_in), np.int32), 1.0, stream=3)
+    with pytest.raises(ValueError, match=r"request #1 for model 'ff' "
+                                         r"\(stream 3\)"):
+        srv.serve([good, ragged])
+    flat = Request("ff", np.zeros(n_in, np.int32), 0.0, stream=1)
+    with pytest.raises(ValueError, match="2-D"):
+        srv.serve([flat])
+
+
+def test_server_resolves_registry_attached_policy(ff_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program, policy=BatchPolicy(max_batch=1))
+    assert reg.policy("ff").max_batch == 1
+    with pytest.raises(KeyError):
+        reg.policy("missing")
+    srv = Server(reg, policy=BatchPolicy(max_batch=8),
+                 service_model=LINEAR)
+    assert srv.policy_for("ff").max_batch == 1     # registry wins default
+    srv2 = Server(reg, policies={"ff": BatchPolicy(max_batch=4)},
+                  service_model=LINEAR)
+    assert srv2.policy_for("ff").max_batch == 4    # explicit wins registry
+    reg.unregister("ff")
+    reg.register("ff", ff_program)                 # policy was dropped too
+    assert reg.policy("ff") is None
+    assert srv.policy_for("ff").max_batch == 8     # falls back to default
+
+
+def test_server_metrics_carry_shed_and_stage_accounting(ff_program):
+    reg = ProgramRegistry()
+    reg.register("ff", ff_program)
+    n_in = ff_program.graph.n_inputs
+    stream = [Request("ff", np.zeros((8, n_in), np.int32), 10.0 * i)
+              for i in range(4)]
+    srv = Server(reg, policy=BatchPolicy(max_batch=1, max_queue=1,
+                                         shed="reject"),
+                 service_model=LINEAR)
+    m = srv.serve(stream)
+    assert m["models"]["ff"]["shed"] == {"queue_full": 2, "deadline": 0}
+    assert m["total"]["shed"] == {"queue_full": 2, "deadline": 0}
+    assert m["total"]["shed_frac"] == 0.5
+    assert m["total"]["deadline_misses"] == 0
+    assert set(m["total"]["stages_us"]) == {"queue_wait", "batch_fill",
+                                            "pad", "compute"}
+    res = srv.last_results["ff"]
+    s = res.served
+    np.testing.assert_array_equal(res.stage_sum()[s],
+                                  res.latencies_us[s])
+
+
+# ---------------------------------------------------------------------------
+# AsyncServer: real-clock backpressure as exceptions
+# ---------------------------------------------------------------------------
+
+SLOW_50MS = linear_service_model(50_000.0, 0.0)
+
+
+async def _eventually(pred, timeout=5.0):
+    """Poll until ``pred()`` — bounds timing races without sleeps
+    tuned to scheduler luck."""
+    loop = asyncio.get_running_loop()
+    end = loop.time() + timeout
+    while not pred():
+        if loop.time() > end:
+            raise AssertionError("condition not reached in time")
+        await asyncio.sleep(0.005)
+
+
+def _async_registry(program):
+    reg = ProgramRegistry()
+    reg.register("m", program)
+    return reg
+
+
+def _req(program, seed=0):
+    g = program.graph
+    rng = np.random.default_rng(seed)
+    return Request("m", (rng.random((6, g.n_inputs)) < 0.3)
+                   .astype(np.int32), 0.0, stream=seed)
+
+
+def test_async_server_serves_with_bit_exact_stages(ff_program):
+    async def main():
+        srv = AsyncServer(
+            _async_registry(ff_program),
+            policy=BatchPolicy(max_batch=4, max_wait_us=3000.0),
+            service_model=linear_service_model(2000.0, 100.0))
+        async with srv:
+            done = await asyncio.gather(
+                *[srv.submit(_req(ff_program, i)) for i in range(8)])
+        for c in done:
+            total = ((c.queue_wait_us + c.fill_wait_us)
+                     + c.pad_us) + c.compute_us
+            assert total == c.latency_us            # bit-exact, real clock
+            assert c.model == "m" and c.bucket in (1, 2, 4)
+            assert 1 <= c.batch_size <= 4 and not c.degraded
+        assert sorted(c.stream for c in done) == list(range(8))
+        m = srv.metrics()
+        assert m["total"]["requests"] == 8
+        assert m["total"]["timeline"] == "real"
+        assert m["total"]["shed"] == {"queue_full": 0, "deadline": 0}
+        assert set(m["total"]["stages_us"]) == {"queue_wait", "batch_fill",
+                                                "pad", "compute"}
+    asyncio.run(main())
+
+
+def test_async_server_lifecycle_and_unknown_model(ff_program):
+    async def main():
+        srv = AsyncServer(_async_registry(ff_program),
+                          service_model=SLOW_50MS)
+        with pytest.raises(RuntimeError, match="not started"):
+            await srv.submit(_req(ff_program))
+        async with srv:
+            with pytest.raises(KeyError, match="nope"):
+                await srv.submit(Request("nope", np.zeros((4, 2),
+                                                          np.int32), 0.0))
+            with pytest.raises(RuntimeError, match="already started"):
+                await srv.start()
+    asyncio.run(main())
+
+
+def test_async_server_reject_backpressure(ff_program):
+    async def main():
+        srv = AsyncServer(
+            _async_registry(ff_program),
+            policy=BatchPolicy(max_batch=1, max_queue=1, shed="reject"),
+            service_model=SLOW_50MS)
+        async with srv:
+            t1 = asyncio.create_task(srv.submit(_req(ff_program, 1)))
+            await _eventually(lambda: srv._dequeued["m"] == 1)
+            t2 = asyncio.create_task(srv.submit(_req(ff_program, 2)))
+            await _eventually(lambda: len(srv._queues["m"]) == 1)
+            with pytest.raises(QueueFullError, match="queue full"):
+                await srv.submit(_req(ff_program, 3))
+            done = await asyncio.gather(t1, t2)
+        assert [c.stream for c in done] == [1, 2]   # FIFO survivors
+        m = srv.metrics()
+        assert m["total"]["shed"] == {"queue_full": 1, "deadline": 0}
+        assert m["total"]["shed_frac"] == pytest.approx(1 / 3)
+    asyncio.run(main())
+
+
+def test_async_server_drop_oldest_fails_the_old_await(ff_program):
+    async def main():
+        srv = AsyncServer(
+            _async_registry(ff_program),
+            policy=BatchPolicy(max_batch=1, max_queue=1,
+                               shed="drop-oldest"),
+            service_model=SLOW_50MS)
+        async with srv:
+            t1 = asyncio.create_task(srv.submit(_req(ff_program, 1)))
+            await _eventually(lambda: srv._dequeued["m"] == 1)
+            t2 = asyncio.create_task(srv.submit(_req(ff_program, 2)))
+            await _eventually(lambda: len(srv._queues["m"]) == 1)
+            t3 = asyncio.create_task(srv.submit(_req(ff_program, 3)))
+            r1, r2, r3 = await asyncio.gather(t1, t2, t3,
+                                              return_exceptions=True)
+        assert r1.stream == 1 and r3.stream == 3    # newest survived
+        assert isinstance(r2, QueueFullError)       # oldest was shed
+        assert "drop-oldest" in str(r2)
+    asyncio.run(main())
+
+
+def test_async_server_deadline_miss_raises(ff_program):
+    async def main():
+        srv = AsyncServer(
+            _async_registry(ff_program),
+            policy=BatchPolicy(max_batch=1, deadline_us=10_000.0),
+            service_model=linear_service_model(60_000.0, 0.0))
+        async with srv:
+            t1 = asyncio.create_task(srv.submit(_req(ff_program, 1)))
+            await _eventually(lambda: srv._dequeued["m"] == 1)
+            t2 = asyncio.create_task(srv.submit(_req(ff_program, 2)))
+            r1, r2 = await asyncio.gather(t1, t2, return_exceptions=True)
+        assert r1.stream == 1
+        assert isinstance(r2, DeadlineMissError)
+        assert srv.metrics()["total"]["deadline_misses"] == 1
+    asyncio.run(main())
+
+
+def test_async_server_stop_without_drain_sheds_pending(ff_program):
+    async def main():
+        srv = AsyncServer(
+            _async_registry(ff_program),
+            policy=BatchPolicy(max_batch=1),
+            service_model=SLOW_50MS)
+        await srv.start()
+        t1 = asyncio.create_task(srv.submit(_req(ff_program, 1)))
+        await _eventually(lambda: srv._dequeued["m"] == 1)
+        t2 = asyncio.create_task(srv.submit(_req(ff_program, 2)))
+        await _eventually(lambda: len(srv._queues["m"]) == 1)
+        await srv.stop(drain=False)
+        r1, r2 = await asyncio.gather(t1, t2, return_exceptions=True)
+        assert r1.stream == 1                       # in flight: finished
+        assert isinstance(r2, ShedError)            # queued: shed
+        assert not isinstance(r2, (QueueFullError, DeadlineMissError))
+    asyncio.run(main())
+
+
+def test_async_server_engine_mode_outputs_bit_exact(ff_program):
+    async def main():
+        srv = AsyncServer(_async_registry(ff_program),
+                          policy=BatchPolicy(max_batch=2,
+                                             max_wait_us=5000.0))
+        reqs = [_req(ff_program, i) for i in range(3)]
+        async with srv:
+            done = await asyncio.gather(*[srv.submit(r) for r in reqs])
+        by_stream = {c.stream: c for c in done}
+        for i, r in enumerate(reqs):
+            c = by_stream[i]
+            s1, v1, st1 = ff_program.run(r.ext)
+            assert c.outputs[0].tobytes() == s1.tobytes()
+            assert c.outputs[1].tobytes() == v1.tobytes()
+            np.testing.assert_array_equal(c.outputs[2],
+                                          st1["packet_counts"])
+    asyncio.run(main())
 
 
 # ---------------------------------------------------------------------------
